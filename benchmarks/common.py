@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: wall-time measurement + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    """Median seconds/call after warmup (jit-compiled callables)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, value, unit: str = "", **extra):
+    ROWS.append({"name": name, "value": value, "unit": unit, **extra})
+    ex = " ".join(f"{k}={v}" for k, v in extra.items())
+    print(f"  {name:<44s} {value:>14} {unit:<10s} {ex}")
+
+
+def flush_csv(path: str):
+    import csv, os
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    keys = sorted({k for r in ROWS for k in r})
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(ROWS)

@@ -1,0 +1,86 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+COLS = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful", "coll_GB", "flops_T")
+
+
+def load():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            recs.append(json.load(open(p)))
+        except Exception:
+            pass
+    return recs
+
+
+def row(r):
+    if r.get("status") != "ok":
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": r.get("status", "?"),
+                "note": (r.get("reason") or r.get("error", ""))[:60]}
+    t = r["analysis"]["terms"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "status": "ok",
+        "compute_s": f"{t['compute_s']:.3f}",
+        "memory_s": f"{t['memory_s']:.3f}",
+        "collective_s": f"{t['collective_s']:.3f}",
+        "dominant": r["analysis"]["dominant"].replace("_s", ""),
+        "useful": f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "-",
+        "coll_GB": f"{r['analysis']['collective']['total']/1e9:.1f}",
+        "flops_T": f"{r['analysis']['hlo_flops']/1e12:.1f}",
+    }
+
+
+def markdown_table(recs, mesh="pod"):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful 6ND/HLO | status |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted((x for x in recs if x["mesh"] == mesh),
+                    key=lambda x: (x["arch"], order.get(x["shape"], 9))):
+        d = row(r)
+        if d["status"] == "ok":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | {d['compute_s']} | "
+                f"{d['memory_s']} | {d['collective_s']} | {d['dominant']} | "
+                f"{d['useful']} | ok |")
+        else:
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | - | - | - | - | - | "
+                f"{d['status']}: {d.get('note','')} |")
+    return "\n".join(lines)
+
+
+def run(full_scale: bool = True):
+    print("== roofline: dry-run aggregation ==")
+    recs = load()
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    fail = len(recs) - ok - sk
+    print(f"  cells: {ok} ok / {sk} skipped / {fail} failed "
+          f"(of {len(recs)} recorded)")
+    for mesh in ("pod", "multipod"):
+        n = sum(1 for r in recs if r["mesh"] == mesh and r.get("status") == "ok")
+        print(f"  {mesh}: {n} compiled")
+    out = os.path.join(RESULTS, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        for mesh in ("pod", "multipod"):
+            f.write(f"### mesh = {mesh}\n\n")
+            f.write(markdown_table(recs, mesh))
+            f.write("\n\n")
+    print(f"  table -> {os.path.abspath(out)}")
+    return {"ok": ok, "skipped": sk, "failed": fail}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Benchmark harness: one module per paper table/figure + TPU-adaptation
+benches.  ``python -m benchmarks.run [--quick]`` prints every metric and
+writes benchmarks/results/bench.csv.
+
+  fig6_levels    paper Fig. 6 (levels/FLOPs before-after rewriting)
+  exp1_codegen   paper §V experiment 1 (generated vs handwritten, serial)
+  exp2_rewrite   paper §V experiment 2 (rewritten end-to-end)
+  kernels_bench  Pallas kernel structure + sanity timings
+  dist_solve     distributed solve collective counts (8 virtual devices)
+  roofline       aggregates dry-run JSONs into the §Roofline table
+  train_bench    tokens/s of the smoke-scale end-to-end train step
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def train_bench(full_scale: bool):
+    print("== train_bench: end-to-end smoke train step ==")
+    import jax
+    from repro.configs import smoke_config
+    from repro.data import SyntheticLM
+    from repro.models.model import Model
+    from repro.optim import get_optimizer
+    from repro.train.steps import make_train_step
+    from .common import emit, timeit
+
+    for arch in ("gemma3-1b", "recurrentgemma-2b", "llama4-scout-17b-a16e"):
+        cfg = smoke_config(arch)
+        model = Model(cfg, remat=False)
+        params = model.init(jax.random.key(0))
+        opt = get_optimizer("adamw")
+        state = opt.init(params)
+        B, S = (8, 128) if full_scale else (2, 32)
+        data = SyntheticLM(cfg.vocab_size, S, B)
+        b = data.batch(0)
+        batch = {"tokens": b.tokens, "labels": b.labels}
+        step = jax.jit(make_train_step(model, opt))
+        t = timeit(lambda: step(params, state, batch), iters=3, warmup=1)
+        emit(f"train.{arch}.ms_per_step", f"{t*1e3:.1f}", "ms",
+             toks_per_s=f"{B*S/t:.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix scale (CI-speed)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    full = not args.quick
+
+    import jax
+    jax.config.update("jax_num_cpu_devices", 8)   # dist_solve needs a mesh
+
+    from . import dist_solve, exp1_codegen, exp2_rewrite, fig6_levels, \
+        kernels_bench, roofline
+    from .common import flush_csv
+
+    suites = {
+        "fig6_levels": fig6_levels.run,
+        "exp1_codegen": exp1_codegen.run,
+        "exp2_rewrite": exp2_rewrite.run,
+        "kernels_bench": kernels_bench.run,
+        "dist_solve": dist_solve.run,
+        "roofline": roofline.run,
+        "train_bench": train_bench,
+    }
+    names = args.only.split(",") if args.only else list(suites)
+    for name in names:
+        suites[name](full)
+        print()
+    flush_csv(os.path.join(os.path.dirname(__file__), "results", "bench.csv"))
+    print("bench.csv written")
+
+
+if __name__ == "__main__":
+    main()

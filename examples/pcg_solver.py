@@ -1,0 +1,60 @@
+"""IC(0)-preconditioned CG on a 2-D Poisson problem — the classic system
+SpTRSV lives inside.  The preconditioner application is two matrix-
+specialized triangular solves (with equation rewriting on by default).
+
+    PYTHONPATH=src python examples/pcg_solver.py [--nx 48] [--no-rewrite]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RewriteConfig
+from repro.core.levels import build_level_sets
+from repro.core.pcg import make_ic_preconditioner, pcg
+from repro.sparse import ic0_factor, poisson2d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=48)
+    ap.add_argument("--no-rewrite", action="store_true")
+    args = ap.parse_args()
+
+    A = poisson2d(args.nx, args.nx, dtype=np.float32)
+    print(f"Poisson {args.nx}x{args.nx}: n={A.n}, nnz={A.nnz}")
+    L = ic0_factor(A)
+    lv = build_level_sets(L)
+    print(f"IC(0) factor: {L.nnz} nnz, {lv.num_levels} levels "
+          f"(grid wavefronts)")
+
+    rw = None if args.no_rewrite else RewriteConfig(thin_threshold=4)
+    M = make_ic_preconditioner(L, rewrite=rw)
+
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=A.n).astype(np.float32))
+
+    t0 = time.perf_counter()
+    plain = pcg(A, b, None, tol=1e-6, maxiter=2000)
+    t_plain = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pre = pcg(A, b, M, tol=1e-6, maxiter=2000)
+    t_pre = time.perf_counter() - t0
+
+    print(f"CG   (no preconditioner): {plain.iters} iters, "
+          f"res {plain.residual:.2e}, {t_plain:.2f}s")
+    print(f"PCG  (IC0 via SpTRSV):    {pre.iters} iters, "
+          f"res {pre.residual:.2e}, {t_pre:.2f}s")
+    assert pre.converged and pre.iters < plain.iters
+    x = np.asarray(pre.x, np.float64)
+    r = np.asarray(b, np.float64) - A.astype(np.float64).matvec(x)
+    print(f"true residual check: {np.linalg.norm(r):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the paper pipeline on one matrix, in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RewriteConfig, SpTRSV
+from repro.core.levels import build_level_sets
+from repro.sparse import lung2_like
+
+# 1. a matrix with the paper's pathology: hundreds of thin levels
+L = lung2_like(scale=0.2, dtype=np.float32)
+levels = build_level_sets(L)
+print(f"matrix: {L.n} rows, {L.nnz} nnz")
+print(f"levels: {levels.num_levels} "
+      f"({100*levels.thin_fraction(2):.0f}% thin — ≤2 rows)")
+
+# 2. build a matrix-specialized solver WITHOUT the transformation
+base = SpTRSV.build(L, strategy="levelset")
+
+# 3. ... and WITH equation rewriting (the paper's graph transformation)
+solver = SpTRSV.build(L, strategy="levelset",
+                      rewrite=RewriteConfig(thin_threshold=2))
+print("rewrite:", solver.stats.summary())
+
+# 4. solve — rewriting changes the schedule, never the answer
+b = jnp.asarray(np.random.default_rng(0).normal(size=L.n).astype(np.float32))
+x0, x1 = base.solve(b), solver.solve(b)
+err = float(jnp.max(jnp.abs(x0 - x1)))
+print(f"max |x_base - x_rewritten| = {err:.2e}")
+assert err < 1e-3
+
+# 5. the same transformation parallelizes linear recurrences (RG-LRU et al.)
+from repro.core.recurrence import linear_recurrence
+a = jnp.full((16,), 0.9)
+u = jnp.ones((16,))
+h_scan = linear_recurrence(a, u, method="scan")       # Algorithm 1
+h_rw = linear_recurrence(a, u, method="sptrsv")       # rewrite + level solve
+print(f"recurrence via SpTRSV rewriting matches scan: "
+      f"{bool(jnp.allclose(h_scan, h_rw, rtol=1e-4))}")

@@ -1,0 +1,15 @@
+"""Per-architecture configs (one module per assigned arch) + shape registry.
+
+``get("<arch-id>")`` accepts the public dashed id (e.g. "gemma3-12b").
+"""
+from repro.models.config import ARCHS, get_config, smoke_config
+from .shapes import SHAPES, ShapeSpec, runs_cell, skip_reason
+
+ARCH_IDS = tuple(ARCHS)
+
+__all__ = ["ARCHS", "ARCH_IDS", "get_config", "smoke_config",
+           "SHAPES", "ShapeSpec", "runs_cell", "skip_reason"]
+
+
+def get(name: str):
+    return get_config(name)

@@ -1,0 +1,11 @@
+"""[dense] Granite-3.0-8B (hf:ibm-granite/granite-3.0-2b-base family; hf).
+40 layers, d_model=4096, 32 heads / 8 kv (GQA), d_ff=12800, vocab 49155
+(padded to 49408 for sharding).
+
+Selectable as ``--arch granite-3-8b``.
+"""
+from repro.models.config import ARCHS, smoke_config
+
+NAME = "granite-3-8b"
+CONFIG = ARCHS[NAME]
+SMOKE = smoke_config(NAME)

@@ -1,0 +1,12 @@
+"""[vlm] PaliGemma-3B (arXiv:2407.07726; hf).
+18 layers, d_model=2048, 8 heads / 1 kv, head_dim 256, d_ff=16384,
+vocab 257216.  SigLIP is a STUB: 256 precomputed patch embeddings are
+prefixed to the text tokens; prefix-LM mask (bidirectional over the prefix).
+
+Selectable as ``--arch paligemma-3b``.
+"""
+from repro.models.config import ARCHS, smoke_config
+
+NAME = "paligemma-3b"
+CONFIG = ARCHS[NAME]
+SMOKE = smoke_config(NAME)

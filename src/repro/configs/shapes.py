@@ -1,0 +1,56 @@
+"""Assigned input-shape set (identical for every LM-family arch).
+
+``train_*``  lowers ``train_step``; ``prefill_*`` lowers the serving prefill;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``).
+
+``long_500k`` requires sub-quadratic attention: it runs only for archs whose
+layers are recurrent / local-window dominated (see ``runs_cell``); pure
+full-attention archs skip it (recorded per cell in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "runs_cell", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic sequence mixing (recurrent state and/or
+# local-window-dominated attention) — the only ones long_500k runs for
+_SUBQUADRATIC = {
+    "recurrentgemma-2b",   # RG-LRU + 2048-window local attn
+    "xlstm-350m",          # mLSTM/sLSTM state, O(1) per token
+    "gemma3-12b",          # 5:1 local:global — local dominated
+    "gemma3-1b",
+}
+
+
+def runs_cell(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.name in _SUBQUADRATIC
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str:
+    if shape == "long_500k" and cfg.name not in _SUBQUADRATIC:
+        if cfg.family == "audio":
+            return "enc-dec over 30s audio frames; 500k-token decode is out of domain AND every layer is full attention"
+        return "pure full-attention arch: 0.5M-token KV in every layer is the quadratic regime the assignment excludes"
+    return ""

@@ -1,0 +1,13 @@
+"""[audio] Whisper-medium encoder-decoder backbone (arXiv:2212.04356; unverified).
+24 decoder + 24 encoder layers, d_model=1024, 16 heads (MHA, kv=16), d_ff=4096,
+vocab 51865.  The log-mel conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_len, 1024); enc/dec split a cell's
+seq_len budget 50/50.  Sinusoidal positions, no RoPE.
+
+Selectable as ``--arch whisper-medium``.
+"""
+from repro.models.config import ARCHS, smoke_config
+
+NAME = "whisper-medium"
+CONFIG = ARCHS[NAME]
+SMOKE = smoke_config(NAME)

@@ -1,0 +1,30 @@
+"""The paper's contribution: dependency-graph transformation (equation
+rewriting) and specialized code generation for SpTRSV, adapted to TPU/JAX."""
+from .analysis import MatrixAnalysis, analyze
+from .csr import CSRMatrix, eye_csr, from_coo, from_dense
+from .levels import LevelSets, build_level_sets, compute_levels
+from .rewrite import RewriteConfig, RewriteResult, RewriteStats, rewrite_matrix
+from .codegen import Schedule, build_schedule, make_levelset_solver, make_serial_solver
+from .solver import STRATEGIES, SpTRSV
+
+__all__ = [
+    "MatrixAnalysis",
+    "analyze",
+    "CSRMatrix",
+    "eye_csr",
+    "from_coo",
+    "from_dense",
+    "LevelSets",
+    "build_level_sets",
+    "compute_levels",
+    "RewriteConfig",
+    "RewriteResult",
+    "RewriteStats",
+    "rewrite_matrix",
+    "Schedule",
+    "build_schedule",
+    "make_levelset_solver",
+    "make_serial_solver",
+    "STRATEGIES",
+    "SpTRSV",
+]

@@ -1,0 +1,84 @@
+"""Matrix analysis module (paper §IV).
+
+Extracts the properties the code generator consumes: size, nnz, level
+structure, per-level memory-access totals/averages, thin-level fraction, and
+FLOP counts.  The output feeds :mod:`repro.core.codegen` (executor choice,
+unroll thresholds, slab packing) and the benchmark reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .csr import CSRMatrix
+from .levels import LevelSets, build_level_sets
+
+__all__ = ["MatrixAnalysis", "analyze"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixAnalysis:
+    n: int
+    nnz: int
+    nnz_offdiag: int
+    avg_nnz_per_row: float
+    num_levels: int
+    max_level_rows: int
+    thin_levels_2: int              # levels with <= 2 rows (paper's metric)
+    thin_fraction_2: float
+    level_counts: np.ndarray
+    mem_accesses_total: int
+    mem_accesses_per_level: np.ndarray
+    mem_accesses_per_level_avg: float
+    solve_flops: int
+    serial_fraction: float          # rows on the critical path / n
+
+    def report(self) -> Dict:
+        return {
+            "n": self.n,
+            "nnz": self.nnz,
+            "avg_nnz_per_row": round(self.avg_nnz_per_row, 3),
+            "num_levels": self.num_levels,
+            "max_level_rows": self.max_level_rows,
+            "thin_levels(<=2 rows)": self.thin_levels_2,
+            "thin_fraction": round(self.thin_fraction_2, 4),
+            "mem_accesses_total": self.mem_accesses_total,
+            "mem_accesses_per_level_avg": round(self.mem_accesses_per_level_avg, 1),
+            "solve_flops": self.solve_flops,
+            "serial_fraction": round(self.serial_fraction, 6),
+        }
+
+    def pretty(self) -> str:
+        return "\n".join(f"{k:>28s}: {v}" for k, v in self.report().items())
+
+
+def analyze(L: CSRMatrix, levels: Optional[LevelSets] = None) -> MatrixAnalysis:
+    if levels is None:
+        levels = build_level_sets(L)
+    row_nnz = L.row_nnz()
+    # per-level memory accesses: 3 per nnz (L.data, L.indices, x[col]) plus
+    # 2 per row (read b, write x) — the paper's analysis-module metric.
+    per_level = np.array(
+        [3 * int(row_nnz[rows].sum()) + 2 * len(rows) for rows in levels.rows],
+        dtype=np.int64,
+    )
+    counts = levels.counts
+    thin2 = int((counts <= 2).sum())
+    return MatrixAnalysis(
+        n=L.n,
+        nnz=L.nnz,
+        nnz_offdiag=L.nnz - L.n,
+        avg_nnz_per_row=L.nnz / max(L.n, 1),
+        num_levels=levels.num_levels,
+        max_level_rows=int(counts.max()) if counts.size else 0,
+        thin_levels_2=thin2,
+        thin_fraction_2=thin2 / max(levels.num_levels, 1),
+        level_counts=counts,
+        mem_accesses_total=L.memory_accesses(),
+        mem_accesses_per_level=per_level,
+        mem_accesses_per_level_avg=float(per_level.mean()) if per_level.size else 0.0,
+        solve_flops=L.solve_flops(),
+        serial_fraction=levels.num_levels / max(L.n, 1),
+    )

@@ -1,0 +1,148 @@
+"""Host-side CSR containers for lower-triangular sparse matrices.
+
+Preprocessing (DAG/level analysis, equation rewriting) runs on host numpy —
+the paper's "matrix analysis module". Execution-side structures (ELL slabs)
+are built by :mod:`repro.core.codegen` and live on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["CSRMatrix", "from_dense", "from_coo", "eye_csr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Compressed-sparse-row matrix (host numpy).
+
+    ``indptr``  int64 (n+1,)
+    ``indices`` int64 (nnz,)  column ids, sorted within each row
+    ``data``    float (nnz,)
+    ``shape``   (n, m)
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+    shape: Tuple[int, int]
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.shape[0]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(cols, vals) of row ``i``."""
+        lo, hi = self.indptr[i], self.indptr[i + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    # -- validation ---------------------------------------------------------
+    def validate(self) -> "CSRMatrix":
+        n, m = self.shape
+        assert self.indptr.shape == (n + 1,)
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.nnz
+        assert np.all(np.diff(self.indptr) >= 0)
+        assert self.indices.shape == self.data.shape
+        if self.nnz:
+            assert self.indices.min() >= 0 and self.indices.max() < m
+            # sorted columns within rows
+            for i in range(min(n, 64)):  # spot-check head; full check is O(nnz)
+                c, _ = self.row(i)
+                assert np.all(np.diff(c) > 0), f"row {i} columns not sorted/unique"
+        return self
+
+    def is_lower_triangular(self, *, strict_diag: bool = True) -> bool:
+        """True iff all entries have col <= row and (optionally) every
+        diagonal entry exists and is nonzero."""
+        rows = np.repeat(np.arange(self.n), self.row_nnz())
+        if np.any(self.indices > rows):
+            return False
+        if strict_diag:
+            last = self.indptr[1:] - 1
+            has_diag = (self.indptr[1:] > self.indptr[:-1]) & (
+                self.indices[np.maximum(last, 0)] == np.arange(self.n)
+            )
+            if not np.all(has_diag):
+                return False
+            if np.any(self.data[last] == 0.0):
+                return False
+        return True
+
+    # -- conversions ----------------------------------------------------------
+    def diagonal(self) -> np.ndarray:
+        """Diagonal entries; assumes lower-triangular with stored diagonal
+        (diagonal is the last entry of each row)."""
+        last = self.indptr[1:] - 1
+        return self.data[last]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        rows = np.repeat(np.arange(self.n), self.row_nnz())
+        out[rows, self.indices] = self.data
+        return out
+
+    def matvec(self, v: np.ndarray) -> np.ndarray:
+        rows = np.repeat(np.arange(self.n), self.row_nnz())
+        out = np.zeros(self.n, dtype=np.result_type(self.data, v))
+        np.add.at(out, rows, self.data * v[self.indices])
+        return out
+
+    def astype(self, dtype) -> "CSRMatrix":
+        return CSRMatrix(self.indptr, self.indices, self.data.astype(dtype), self.shape)
+
+    def memory_accesses(self) -> int:
+        """Per-solve memory access count (paper's analysis metric): each nnz
+        reads L.data, L.indices and x[col]; each row reads b and writes x."""
+        return 3 * self.nnz + 2 * self.n
+
+    def solve_flops(self) -> int:
+        """FLOPs of one forward substitution: mul+sub per off-diagonal nnz,
+        one divide per row (paper's FLOP accounting for Fig. 6)."""
+        return 2 * (self.nnz - self.n) + self.n
+
+
+def from_coo(rows, cols, vals, shape) -> CSRMatrix:
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    # combine duplicates
+    if rows.size:
+        key_same = np.zeros(rows.size, dtype=bool)
+        key_same[1:] = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        if key_same.any():
+            grp = np.cumsum(~key_same) - 1
+            out_vals = np.zeros(grp[-1] + 1, dtype=vals.dtype)
+            np.add.at(out_vals, grp, vals)
+            keep = ~key_same
+            rows, cols, vals = rows[keep], cols[keep], out_vals
+    indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRMatrix(indptr, cols, vals, tuple(shape))
+
+
+def from_dense(a: np.ndarray) -> CSRMatrix:
+    n, m = a.shape
+    rows, cols = np.nonzero(a)
+    return from_coo(rows, cols, a[rows, cols], (n, m))
+
+
+def eye_csr(n: int, dtype=np.float64) -> CSRMatrix:
+    idx = np.arange(n, dtype=np.int64)
+    return CSRMatrix(np.arange(n + 1, dtype=np.int64), idx, np.ones(n, dtype=dtype), (n, n))

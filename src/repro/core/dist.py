@@ -1,0 +1,138 @@
+"""Distributed SpTRSV over a mesh axis (beyond-paper, required at scale).
+
+Rows of each level are sharded across the ``data`` axis with ``shard_map``.
+After a level solves its rows, the newly computed ``x`` entries are exchanged.
+On a pod, **each level boundary is one collective** — the direct analogue of
+the paper's per-level CPU barrier.  Equation rewriting reduces the number of
+levels and therefore the number of collectives; §Perf of EXPERIMENTS.md
+measures exactly this.
+
+Two exchange strategies (hillclimb pair):
+
+* ``psum``       — naive: every device scatters its solved rows into an
+                   n-vector of zeros and a full ``psum`` combines them.
+                   Bytes/level = O(n).  Paper-faithful port of "barrier".
+* ``all_gather`` — each device contributes only its R/ndev solved values;
+                   bytes/level = O(R_level).  The optimized schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from .codegen import Schedule, LevelSlab
+
+__all__ = ["DistributedSchedule", "shard_schedule", "make_distributed_solver"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedSchedule:
+    """Per-level slabs padded so the row dimension splits evenly over the
+    mesh axis.  Padding rows are no-ops (col 0 / val 0 / diag 1) writing to
+    the scratch slot ``n`` of the x vector (length n+1)."""
+
+    n: int
+    ndev: int
+    rows: List[np.ndarray]   # (R_pad,) per level, pad -> n (scratch slot)
+    cols: List[np.ndarray]   # (K, R_pad)
+    vals: List[np.ndarray]
+    diag: List[np.ndarray]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.rows)
+
+    def collective_bytes(self, itemsize: int = 4, strategy: str = "all_gather") -> int:
+        """Predicted on-wire bytes per solve (per device, ring all-gather):
+        the §Roofline collective term for the distributed solver."""
+        if strategy == "psum":
+            return self.num_levels * 2 * (self.n + 1) * itemsize
+        return sum(r.size * itemsize for r in self.rows)
+
+
+def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
+    pad = size - x.shape[-1]
+    if pad == 0:
+        return x
+    width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return np.pad(x, width, constant_values=fill)
+
+
+def shard_schedule(schedule: Schedule, ndev: int) -> DistributedSchedule:
+    rows, cols, vals, diag = [], [], [], []
+    for slab in schedule.slabs:
+        rpad = int(np.ceil(slab.R / ndev) * ndev)
+        rows.append(_pad_to(slab.rows.astype(np.int32), rpad, schedule.n))
+        cols.append(_pad_to(slab.cols, rpad, 0))
+        vals.append(_pad_to(slab.vals, rpad, 0.0))
+        diag.append(_pad_to(slab.diag, rpad, 1.0))
+    return DistributedSchedule(
+        n=schedule.n, ndev=ndev, rows=rows, cols=cols, vals=vals, diag=diag
+    )
+
+
+def make_distributed_solver(
+    dsched: DistributedSchedule,
+    mesh: Mesh,
+    axis: str = "data",
+    *,
+    strategy: str = "all_gather",
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build a jit-able distributed level-set solve(b) over ``mesh[axis]``.
+
+    x is replicated (n+1, scratch slot last); per level each device solves an
+    R/ndev shard of rows and the solved values are exchanged.
+    """
+    assert strategy in ("all_gather", "psum")
+    n = dsched.n
+    ndev = dsched.ndev
+    # Per-level constants, device-side. Row-shard the slabs over the axis.
+    cols_d = [jnp.asarray(c) for c in dsched.cols]
+    vals_d = [jnp.asarray(v) for v in dsched.vals]
+    diag_d = [jnp.asarray(d) for d in dsched.diag]
+    rows_d = [jnp.asarray(r) for r in dsched.rows]
+
+    in_specs = (
+        P(),  # b (replicated)
+        [P(None, axis)] * dsched.num_levels,  # cols (K, R)
+        [P(None, axis)] * dsched.num_levels,  # vals
+        [P(axis)] * dsched.num_levels,        # diag
+        [P(axis)] * dsched.num_levels,        # rows
+    )
+
+    def _solve(b, cols, vals, diag, rows):
+        dt = b.dtype
+        bx = jnp.concatenate([b, jnp.zeros((1,), dt)])  # scratch slot
+        x = jnp.zeros((n + 1,), dt)
+        for lv in range(len(cols)):
+            s = jnp.sum(vals[lv].astype(dt) * x[cols[lv]], axis=0)  # (R/ndev,)
+            xl = (bx[rows[lv]] - s) / diag[lv].astype(dt)
+            if strategy == "all_gather":
+                xg = jax.lax.all_gather(xl, axis, tiled=True)        # (R,)
+                rg = jax.lax.all_gather(rows[lv], axis, tiled=True)  # (R,)
+                x = x.at[rg].set(xg)
+            else:  # psum: full-vector exchange — the naive barrier port
+                contrib = jnp.zeros((n + 1,), dt).at[rows[lv]].set(xl)
+                x = x + jax.lax.psum(contrib, axis)
+            x = x.at[n].set(0.0)  # clear pad-row scratch writes
+        return x[:n]
+
+    fn = shard_map(
+        _solve,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(),
+        check_vma=False,
+    )
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        return fn(b, cols_d, vals_d, diag_d, rows_d)
+
+    return solve

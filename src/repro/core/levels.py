@@ -1,0 +1,79 @@
+"""Dependency-DAG level-set construction (paper §II, refs [2,18,19]).
+
+The dependency graph ``DAG_L`` has a node per row and an edge ``j -> i`` for
+every off-diagonal nonzero ``L[i, j]``.  ``level(i) = 1 + max(level(deps))``
+(0 if none).  Rows of a level are mutually independent — the parallel
+wavefront; levels execute serially with a barrier between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .csr import CSRMatrix
+
+__all__ = ["LevelSets", "compute_levels", "build_level_sets"]
+
+
+def compute_levels(L: CSRMatrix) -> np.ndarray:
+    """Level of each row. O(nnz) single pass (rows are topologically ordered
+    in a lower-triangular matrix)."""
+    n = L.n
+    level = np.zeros(n, dtype=np.int64)
+    indptr, indices = L.indptr, L.indices
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        cols = indices[lo:hi]
+        # off-diagonal dependencies only
+        if hi - lo > 1:
+            deps = cols[cols < i]
+            if deps.size:
+                level[i] = level[deps].max() + 1
+    return level
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSets:
+    """Rows grouped by level.
+
+    ``level``       (n,) level id per row
+    ``rows``        list over levels of row-id arrays (sorted)
+    ``counts``      (num_levels,) rows per level
+    """
+
+    level: np.ndarray
+    rows: List[np.ndarray]
+    counts: np.ndarray
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.rows)
+
+    def thin_levels(self, threshold: int) -> np.ndarray:
+        """Level ids whose row count is <= threshold (the paper's thin levels;
+        94% of lung2's 478 levels have only 2 rows)."""
+        return np.nonzero(self.counts <= threshold)[0]
+
+    def thin_fraction(self, threshold: int) -> float:
+        return float((self.counts <= threshold).mean()) if self.num_levels else 0.0
+
+    def histogram(self) -> dict:
+        uniq, cnt = np.unique(self.counts, return_counts=True)
+        return {int(u): int(c) for u, c in zip(uniq, cnt)}
+
+
+def build_level_sets(L: CSRMatrix, level: np.ndarray | None = None) -> LevelSets:
+    if level is None:
+        level = compute_levels(L)
+    num_levels = int(level.max()) + 1 if level.size else 0
+    order = np.argsort(level, kind="stable")
+    counts = np.bincount(level, minlength=num_levels)
+    rows: List[np.ndarray] = []
+    off = 0
+    for lv in range(num_levels):
+        c = int(counts[lv])
+        rows.append(np.sort(order[off : off + c]))
+        off += c
+    return LevelSets(level=level, rows=rows, counts=counts)

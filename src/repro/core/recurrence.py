@@ -1,0 +1,131 @@
+"""Linear recurrences as bidiagonal SpTRSV — equation rewriting at work.
+
+The gated linear recurrence used by RG-LRU / mLSTM-style layers,
+
+    h_t = a_t * h_{t-1} + u_t ,        t = 1..T
+
+is exactly a *lower-bidiagonal triangular solve*:
+
+    [ 1                ] [h_1]   [u_1 (+ a_1 h_0)]
+    [-a_2  1           ] [h_2]   [u_2]
+    [     -a_3  1      ] [h_3] = [u_3]
+    [          ...  1  ] [...]   [...]
+
+whose dependency DAG is a pure chain — T levels, the worst case for
+level-set SpTRSV (`repro.sparse.generate.chain_matrix`).  Applying the
+paper's **equation rewriting** to every row simultaneously — substitute row
+t-1's equation into row t — breaks each odd dependency and lifts every row
+one level:
+
+    h_t = (a_t a_{t-1}) h_{t-2} + (a_t u_{t-1} + u_t)
+
+i.e. one rewriting sweep squares the "gap": after k sweeps each row depends
+on h_{t-2^k}; ceil(log2 T) sweeps empty *all* intermediate levels.  That is
+precisely recursive doubling / Blelloch's parallel scan with the associative
+combine
+
+    (a2, u2) ∘ (a1, u1) = (a1*a2, a2*u1 + u2)
+
+So the paper's transformation, specialized to the chain matrix, *derives*
+the parallel scan that makes RG-LRU / mLSTM training parallel on TPU.  The
+FLOP increase the paper reports (+10% on lung2) appears here as the
+O(T log T)-vs-O(T) work trade of the scan — paid to eliminate T−1
+synchronization points, the same bargain.
+
+`linear_recurrence` exposes three executors (all tested equal):
+  * ``scan``      sequential `lax.scan` — paper Algorithm 1 on the chain
+  * ``doubling``  `lax.associative_scan` — equation rewriting to fixpoint
+  * ``sptrsv``    materialize the bidiagonal matrix and call the level-set
+                  solver after `rewrite_matrix` — the literal paper pipeline
+                  (small T only; used by tests to close the loop)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["linear_recurrence", "recurrence_as_sptrsv"]
+
+
+def _combine(elem2, elem1):
+    # note: associative_scan applies combine(carry, new) with elements
+    # ordered along the axis; combine must be associative (it is).
+    a1, u1 = elem2
+    a2, u2 = elem1
+    return a1 * a2, a2 * u1 + u2
+
+
+def linear_recurrence(
+    a: jnp.ndarray,        # (T, ...) gates
+    u: jnp.ndarray,        # (T, ...) inputs
+    h0: jnp.ndarray | None = None,   # (...,) initial state
+    *,
+    method: str = "doubling",
+    axis: int = 0,
+) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + u_t along ``axis``; returns all h_t (T, ...)."""
+    if h0 is not None:
+        # fold h0 into the first input: u_1 += a_1 * h0
+        first = jax.lax.index_in_dim(u, 0, axis) + jax.lax.index_in_dim(a, 0, axis) * h0[None]
+        u = jax.lax.dynamic_update_index_in_dim(u, jnp.squeeze(first, axis), 0, axis)
+    if method == "doubling":
+        _, h = jax.lax.associative_scan(_combine, (a, u), axis=axis)
+        return h
+    if method == "scan":
+        a_m = jnp.moveaxis(a, axis, 0)
+        u_m = jnp.moveaxis(u, axis, 0)
+
+        def body(h, au):
+            at, ut = au
+            h = at * h + ut
+            return h, h
+
+        h0_ = jnp.zeros(u_m.shape[1:], u.dtype)
+        _, h = jax.lax.scan(body, h0_, (a_m, u_m))
+        return jnp.moveaxis(h, 0, axis)
+    if method == "sptrsv":
+        return _recurrence_via_solver(a, u, axis=axis)
+    raise ValueError(method)
+
+
+def _recurrence_via_solver(a, u, *, axis=0):
+    """Literal paper pipeline: build the bidiagonal L, run equation rewriting,
+    solve with the generated level-set executor.  Gates must be concrete
+    (trace-time constants) — this path exists to *prove the equivalence*,
+    not for production (tests / tiny T)."""
+    from .csr import from_coo
+    from .rewrite import RewriteConfig, rewrite_matrix
+    from .solver import SpTRSV
+
+    a_np = np.asarray(jax.device_get(a))
+    a_m = np.moveaxis(a_np, axis, 0)
+    T = a_m.shape[0]
+    flat_a = a_m.reshape(T, -1)
+    u_m = jnp.moveaxis(u, axis, 0).reshape(T, -1)
+    outs = []
+    for j in range(flat_a.shape[1]):
+        rows = list(range(T)) + list(range(1, T))
+        cols = list(range(T)) + list(range(0, T - 1))
+        vals = [1.0] * T + (-flat_a[1:, j]).tolist()
+        L = from_coo(rows, cols, np.asarray(vals, np.float64), (T, T))
+        solver = SpTRSV.build(
+            L, strategy="levelset",
+            rewrite=RewriteConfig(thin_threshold=1, max_row_nnz=T + 1,
+                                  max_fill_ratio=float(T)),
+        )
+        outs.append(solver.solve(u_m[:, j].astype(jnp.float64)))
+    h = jnp.stack(outs, -1).reshape((T,) + a_m.shape[1:]).astype(u.dtype)
+    return jnp.moveaxis(h, 0, axis)
+
+
+def recurrence_as_sptrsv(a: np.ndarray):
+    """Return the bidiagonal CSR matrix of the recurrence with gates ``a``
+    (T,) — exposed so benchmarks/tests can inspect its level structure."""
+    from .csr import from_coo
+
+    T = a.shape[0]
+    rows = list(range(T)) + list(range(1, T))
+    cols = list(range(T)) + list(range(0, T - 1))
+    vals = [1.0] * T + (-np.asarray(a)[1:]).tolist()
+    return from_coo(rows, cols, np.asarray(vals, np.float64), (T, T))

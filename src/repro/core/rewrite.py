@@ -1,0 +1,220 @@
+"""Equation rewriting — the paper's graph transformation (§III).
+
+Rewriting row ``i`` using its dependency ``j`` substitutes row ``j``'s equation
+into row ``i``.  Rearranged back into ``L x = b`` form (paper Fig. 3) this is
+the elementary elimination
+
+    row_i <- row_i - (L[i,j]/L[j,j]) * row_j
+    b_i   <- b_i   - (L[i,j]/L[j,j]) * b_j
+
+which breaks edge ``j -> i`` in DAG_L (adding fill-in at ``cols(row_j)``) and
+lifts row ``i`` to an earlier level.  Applied to rows of *thin* levels it
+empties those levels, removing their synchronization barriers (paper: lung2
+478 -> 66 levels, +10% FLOPs).
+
+Because ``b`` changes between solves, the RHS update must be replayed per
+solve.  We track, for every rewritten row, its expression in the *original*
+equations:  ``E`` (unit-lower-triangular, sparse) with ``b' = E b`` applied as
+one fully-parallel SpMV.  Solution invariance:  ``L' x = E b  <=>  L x = b``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .csr import CSRMatrix, from_coo
+from .levels import LevelSets, build_level_sets, compute_levels
+
+__all__ = ["RewriteConfig", "RewriteStats", "RewriteResult", "rewrite_matrix"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteConfig:
+    """Policy for which rows to rewrite (paper: chosen manually; here: the
+    thin-level policy of §V plus safety budgets)."""
+
+    thin_threshold: int = 2         # level is thin if rows <= threshold
+    max_row_nnz: int = 512          # stop rewriting a row that grows past this
+    max_fill_ratio: float = 2.0     # global budget: nnz(L') <= ratio * nnz(L)
+    use_original_rows: bool = False  # paper Fig.2 substitutes original
+    # equations (may need chains of eliminations); False substitutes the
+    # current (already-rewritten) row — one elimination per offending dep.
+    pivot_tol: float = 0.0          # skip eliminations with |L_jj| <= tol
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteStats:
+    levels_before: int
+    levels_after: int
+    nnz_before: int
+    nnz_after: int
+    e_nnz_offdiag: int
+    flops_before: int
+    flops_after: int            # solve(L') + spmv(E) per paper-style counting
+    rows_rewritten: int
+    eliminations: int
+
+    @property
+    def level_reduction(self) -> float:
+        return 1.0 - self.levels_after / max(self.levels_before, 1)
+
+    @property
+    def flop_increase(self) -> float:
+        return self.flops_after / max(self.flops_before, 1) - 1.0
+
+    def summary(self) -> str:
+        return (
+            f"levels {self.levels_before} -> {self.levels_after} "
+            f"(-{100*self.level_reduction:.1f}% barriers), "
+            f"FLOPs {self.flops_before} -> {self.flops_after} "
+            f"(+{100*self.flop_increase:.1f}%), "
+            f"rows rewritten {self.rows_rewritten}, "
+            f"eliminations {self.eliminations}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteResult:
+    L: CSRMatrix            # transformed matrix L'
+    E: CSRMatrix            # RHS operator, b' = E b (unit lower triangular)
+    levels: LevelSets       # level sets of L'
+    stats: RewriteStats
+
+
+def _row_dict(L: CSRMatrix, i: int) -> Dict[int, float]:
+    cols, vals = L.row(i)
+    return dict(zip(cols.tolist(), vals.tolist()))
+
+
+def rewrite_matrix(
+    L: CSRMatrix,
+    levels: Optional[LevelSets] = None,
+    config: RewriteConfig = RewriteConfig(),
+) -> RewriteResult:
+    """Apply the equation-rewriting transformation to rows of thin levels."""
+    if levels is None:
+        levels = build_level_sets(L)
+    n = L.n
+    orig_level = levels.level
+    counts = levels.counts
+    kept_levels = set(np.nonzero(counts > config.thin_threshold)[0].tolist())
+    kept_levels.add(0)  # level 0 is always a valid destination
+
+    diag = L.diagonal()
+    nnz_budget = int(config.max_fill_ratio * L.nnz)
+
+    # Rows modified so far: row expression over x-columns, and over b-entries.
+    mod_rows: Dict[int, Dict[int, float]] = {}
+    mod_rhs: Dict[int, Dict[int, float]] = {}
+
+    def current_row(j: int) -> Dict[int, float]:
+        return mod_rows[j] if j in mod_rows else _row_dict(L, j)
+
+    def current_rhs(j: int) -> Dict[int, float]:
+        return mod_rhs[j] if j in mod_rhs else {j: 1.0}
+
+    def source_row(j: int) -> Dict[int, float]:
+        if config.use_original_rows:
+            return _row_dict(L, j)
+        return current_row(j)
+
+    def source_rhs(j: int) -> Dict[int, float]:
+        if config.use_original_rows:
+            return {j: 1.0}
+        return current_rhs(j)
+
+    fill_added = 0
+    eliminations = 0
+    rows_rewritten = 0
+
+    # Topological (row) order: every dependency j of row i has j < i, so its
+    # final (possibly rewritten) equation is already settled when we reach i.
+    for lv in np.nonzero(counts <= config.thin_threshold)[0]:
+        if lv == 0:
+            continue  # level-0 rows have no dependencies to break
+        for i in levels.rows[lv]:
+            i = int(i)
+            row = _row_dict(L, i)
+            rhs = {i: 1.0}
+            changed = False
+            # Deps needing elimination: rows living in removed (thin) levels.
+            # With use_original_rows=True an elimination can reintroduce thin
+            # deps, so loop to a fixed point; otherwise one pass suffices.
+            guard = 0
+            while True:
+                guard += 1
+                bad = [
+                    j
+                    for j in row
+                    if j != i
+                    and int(orig_level[j]) not in kept_levels
+                    and abs(diag[j]) > config.pivot_tol
+                ]
+                if not bad or guard > n:
+                    break
+                if len(row) > config.max_row_nnz or fill_added + L.nnz > nnz_budget:
+                    break  # budget hit: keep the partially rewritten row (still exact)
+                # eliminate the highest-level offending dep first
+                j = max(bad, key=lambda c: orig_level[c])
+                t = row[j] / diag[j]
+                before = len(row)
+                for c, v in source_row(j).items():
+                    row[c] = row.get(c, 0.0) - t * v
+                    if row[c] == 0.0 and c != i:
+                        del row[c]
+                row.pop(j, None)  # exact cancellation of the eliminated entry
+                for c, v in source_rhs(j).items():
+                    rhs[c] = rhs.get(c, 0.0) - t * v
+                    if rhs[c] == 0.0 and c != i:
+                        del rhs[c]
+                fill_added += len(row) - before
+                eliminations += 1
+                changed = True
+                if not config.use_original_rows:
+                    # current-row elimination never reintroduces thin deps
+                    # (row_j was already settled); loop continues for any
+                    # remaining original thin deps of row i.
+                    continue
+            if changed:
+                mod_rows[i] = row
+                mod_rhs[i] = rhs
+                rows_rewritten += 1
+
+    # ---- materialize L' and E as CSR --------------------------------------
+    r_rows, r_cols, r_vals = [], [], []
+    e_rows, e_cols, e_vals = [], [], []
+    for i in range(n):
+        if i in mod_rows:
+            items = sorted(mod_rows[i].items())
+        else:
+            cols, vals = L.row(i)
+            items = list(zip(cols.tolist(), vals.tolist()))
+        for c, v in items:
+            r_rows.append(i)
+            r_cols.append(c)
+            r_vals.append(v)
+        for c, v in sorted(current_rhs(i).items()):
+            e_rows.append(i)
+            e_cols.append(c)
+            e_vals.append(v)
+
+    Lp = from_coo(r_rows, r_cols, np.asarray(r_vals, dtype=L.dtype), L.shape)
+    E = from_coo(e_rows, e_cols, np.asarray(e_vals, dtype=L.dtype), L.shape)
+    new_levels = build_level_sets(Lp)
+
+    e_off = E.nnz - n
+    stats = RewriteStats(
+        levels_before=levels.num_levels,
+        levels_after=new_levels.num_levels,
+        nnz_before=L.nnz,
+        nnz_after=Lp.nnz,
+        e_nnz_offdiag=e_off,
+        flops_before=L.solve_flops(),
+        # solve(L') plus the per-solve SpMV b' = E b (2 flops per off-diag nnz)
+        flops_after=Lp.solve_flops() + 2 * e_off,
+        rows_rewritten=rows_rewritten,
+        eliminations=eliminations,
+    )
+    return RewriteResult(L=Lp, E=E, levels=new_levels, stats=stats)

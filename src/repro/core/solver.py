@@ -1,0 +1,141 @@
+"""Public SpTRSV API — ties analysis, rewriting, and codegen together.
+
+    solver = SpTRSV.build(L, strategy="levelset", rewrite=RewriteConfig())
+    x = solver.solve(b)          # jit-compiled, matrix-specialized
+
+Strategies
+----------
+``serial``         row-serial scan (paper Algorithm 1 — correctness baseline)
+``levelset``       generated per-level vectorized segments (paper codegen)
+``levelset_unroll``same, with tiny levels unrolled as constant-embedded code
+``pallas_level``   per-level Pallas TPU kernel (kernels/sptrsv_level)
+``pallas_fused``   whole solve in one Pallas kernel, x in VMEM (beyond-paper)
+``distributed``    shard_map level solve over a mesh axis (one collective
+                   per level — rewriting reduces collective count)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .analysis import MatrixAnalysis, analyze
+from .codegen import (
+    Schedule,
+    build_schedule,
+    make_levelset_solver,
+    make_rhs_transform,
+    make_serial_solver,
+)
+from .csr import CSRMatrix
+from .levels import build_level_sets
+from .rewrite import RewriteConfig, RewriteResult, rewrite_matrix
+
+__all__ = ["SpTRSV", "STRATEGIES"]
+
+STRATEGIES = (
+    "serial",
+    "levelset",
+    "levelset_unroll",
+    "pallas_level",
+    "pallas_fused",
+    "distributed",
+)
+
+
+@dataclasses.dataclass
+class SpTRSV:
+    """A matrix-specialized, jit-compiled triangular solver."""
+
+    n: int
+    strategy: str
+    analysis: MatrixAnalysis
+    schedule: Optional[Schedule]
+    rewrite_result: Optional[RewriteResult]
+    _solve_fn: Callable[[jnp.ndarray], jnp.ndarray]
+    _rhs_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]]
+
+    @staticmethod
+    def build(
+        L: CSRMatrix,
+        *,
+        strategy: str = "levelset",
+        rewrite: Optional[RewriteConfig] = None,
+        unroll_threshold: int = 4,
+        bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
+        mesh=None,
+        mesh_axis: str = "data",
+        dist_strategy: str = "all_gather",
+        interpret: bool = True,
+        jit: bool = True,
+    ) -> "SpTRSV":
+        assert strategy in STRATEGIES, strategy
+        assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
+        levels = build_level_sets(L)
+        analysis = analyze(L, levels)
+
+        rres: Optional[RewriteResult] = None
+        rhs_fn = None
+        target, target_levels = L, levels
+        if rewrite is not None:
+            rres = rewrite_matrix(L, levels, rewrite)
+            rhs_fn = make_rhs_transform(rres)
+            target, target_levels = rres.L, rres.levels
+
+        schedule: Optional[Schedule] = None
+        if strategy == "serial":
+            fn = make_serial_solver(target)
+        elif strategy in ("levelset", "levelset_unroll"):
+            schedule = build_schedule(target, target_levels,
+                                      bucket_pad_ratio=bucket_pad_ratio)
+            fn = make_levelset_solver(
+                schedule,
+                unroll_threshold=unroll_threshold if strategy == "levelset_unroll" else 0,
+            )
+        elif strategy == "pallas_level":
+            from repro.kernels.sptrsv_level import ops as level_ops
+
+            schedule = build_schedule(target, target_levels)
+            fn = level_ops.make_solver(schedule, interpret=interpret)
+        elif strategy == "pallas_fused":
+            from repro.kernels.sptrsv_fused import ops as fused_ops
+
+            schedule = build_schedule(target, target_levels)
+            fn = fused_ops.make_solver(schedule, interpret=interpret)
+        elif strategy == "distributed":
+            from .dist import make_distributed_solver, shard_schedule
+
+            assert mesh is not None, "distributed strategy needs a mesh"
+            schedule = build_schedule(target, target_levels)
+            ndev = int(np.prod([mesh.shape[a] for a in (mesh_axis,)]))
+            dsched = shard_schedule(schedule, ndev)
+            fn = make_distributed_solver(dsched, mesh, mesh_axis, strategy=dist_strategy)
+        else:  # pragma: no cover
+            raise ValueError(strategy)
+
+        if rhs_fn is not None:
+            base_fn = fn
+
+            def fn(b):  # noqa: F811 — compose RHS transform with the solve
+                return base_fn(rhs_fn(b))
+
+        solve_fn = jax.jit(fn) if jit else fn
+        return SpTRSV(
+            n=L.n,
+            strategy=strategy,
+            analysis=analysis,
+            schedule=schedule,
+            rewrite_result=rres,
+            _solve_fn=solve_fn,
+            _rhs_fn=rhs_fn,
+        )
+
+    def solve(self, b: jnp.ndarray) -> jnp.ndarray:
+        return self._solve_fn(b)
+
+    @property
+    def stats(self):
+        return self.rewrite_result.stats if self.rewrite_result else None

@@ -1,0 +1,5 @@
+from .compress import CompressionState, compressed_allreduce, make_compressed_grad_fn
+from .pipeline import gpipe_stage_fn, make_gpipe
+
+__all__ = ["CompressionState", "compressed_allreduce", "make_compressed_grad_fn",
+           "gpipe_stage_fn", "make_gpipe"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the SpTRSV hot paths (the compute layer the paper
+optimizes with generated code):
+
+* ``sptrsv_level``  — one level (wavefront) as gather/FMA/reduce over an ELL slab
+* ``sptrsv_fused``  — the whole solve in ONE pallas_call, x resident in VMEM
+                      (the TPU analogue of removing all synchronization barriers)
+* ``spmv_ell``      — ELL SpMV (the rewriting method's per-solve b' = E b)
+* ``trsm_block``    — batched dense diagonal-block apply (MXU; paper ref [22])
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle).  Kernels are validated in interpret mode on CPU;
+TPU v5e is the lowering target.
+"""

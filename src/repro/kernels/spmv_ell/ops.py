@@ -1,0 +1,40 @@
+"""Jit'd wrapper: CSR -> padded ELL, then the Pallas SpMV."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import build_ell
+from repro.core.csr import CSRMatrix
+
+from .kernel import spmv
+
+__all__ = ["make_spmv"]
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return max(int(np.ceil(v / m) * m), m)
+
+
+def make_spmv(
+    M: CSRMatrix, *, interpret: bool = True, block: int = 1024
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    ell = build_ell(M)
+    n = M.n
+    n_pad = _ceil_to(n, block)
+    m_pad = _ceil_to(M.shape[1], 128)
+    cols = np.zeros((ell.K, n_pad), np.int32)
+    cols[:, :n] = ell.cols
+    vals = np.zeros((ell.K, n_pad), np.float32)
+    vals[:, :n] = ell.vals
+    cols_d, vals_d = jnp.asarray(cols), jnp.asarray(vals)
+
+    def matvec(v: jnp.ndarray) -> jnp.ndarray:
+        dt = v.dtype
+        v_pad = jnp.zeros((m_pad,), dt).at[: v.shape[0]].set(v)
+        y = spmv(v_pad, cols_d, vals_d.astype(dt), block=block, interpret=interpret)
+        return y[:n]
+
+    return matvec

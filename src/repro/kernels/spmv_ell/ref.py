@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for ELL SpMV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["spmv_ref"]
+
+
+def spmv_ref(v_pad, cols, vals):
+    return jnp.sum(vals * v_pad[cols], axis=0)

@@ -1,0 +1,96 @@
+"""Jit'd wrapper: pack a Schedule into the fused level-order layout and
+solve with one pallas_call."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import Schedule
+
+from .kernel import fused_solve
+
+__all__ = ["FusedLayout", "build_layout", "make_solver"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedLayout:
+    """Level-order permuted ELL layout with chunk-aligned level boundaries.
+
+    ``perm_rows[p]`` = original row at position p (pad -> n).
+    ``pos[i]``       = position of original row i.
+    ``cols``         (K, n_pad) dependency *positions* (pad: points at a
+                     pad position whose value is always 0).
+    """
+
+    n: int
+    n_pad: int
+    chunk: int
+    K: int
+    perm_rows: np.ndarray
+    pos: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    diag: np.ndarray
+
+    @property
+    def padded_flops(self) -> int:
+        return 2 * self.K * self.n_pad + self.n_pad
+
+
+def build_layout(schedule: Schedule, chunk: int = 512) -> FusedLayout:
+    n = schedule.n
+    K = max(s.K for s in schedule.slabs)
+    # positions: levels in order, each padded to a chunk multiple
+    spans = []
+    off = 0
+    for slab in schedule.slabs:
+        r_pad = int(np.ceil(slab.R / chunk) * chunk)
+        spans.append((off, r_pad))
+        off += r_pad
+    n_pad = off
+    perm_rows = np.full((n_pad,), n, dtype=np.int32)
+    pos = np.zeros((n + 1,), dtype=np.int64)
+    for (o, _), slab in zip(spans, schedule.slabs):
+        perm_rows[o : o + slab.R] = slab.rows
+        pos[slab.rows] = np.arange(o, o + slab.R)
+    pos[n] = n_pad - 1  # scratch row maps to the last pad position
+
+    cols = np.zeros((K, n_pad), dtype=np.int32)
+    vals = np.zeros((K, n_pad), dtype=np.float32)
+    diag = np.ones((n_pad,), dtype=np.float32)
+    for (o, _), slab in zip(spans, schedule.slabs):
+        k = slab.K
+        # remap dependency columns (original row ids) to positions
+        cols[:k, o : o + slab.R] = pos[slab.cols]
+        vals[:k, o : o + slab.R] = slab.vals
+        diag[o : o + slab.R] = slab.diag
+    return FusedLayout(
+        n=n, n_pad=n_pad, chunk=chunk, K=K,
+        perm_rows=perm_rows, pos=pos, cols=cols, vals=vals, diag=diag,
+    )
+
+
+def make_solver(
+    schedule: Schedule, *, interpret: bool = True, chunk: int = 512
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    lay = build_layout(schedule, chunk)
+    perm_rows = jnp.asarray(lay.perm_rows)
+    pos = jnp.asarray(lay.pos[: lay.n])
+    cols = jnp.asarray(lay.cols)
+    vals = jnp.asarray(lay.vals)
+    diag = jnp.asarray(lay.diag)
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        dt = b.dtype
+        b_ext = jnp.concatenate([b, jnp.zeros((1,), dt)])
+        bl_perm = b_ext[perm_rows]  # pad rows -> b_ext[n] = 0
+        xp = fused_solve(
+            bl_perm, cols, vals.astype(dt), diag.astype(dt),
+            chunk=lay.chunk, interpret=interpret,
+        )
+        return xp[pos]
+
+    return solve

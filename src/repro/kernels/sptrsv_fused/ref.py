@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused kernel: sequential chunk loop over the
+permuted layout (same math, no Pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fused_solve_ref"]
+
+
+def fused_solve_ref(bl_perm, cols, vals, diag, *, chunk: int = 512):
+    K, n_pad = cols.shape
+    x = jnp.zeros((n_pad,), bl_perm.dtype)
+    for c in range(n_pad // chunk):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        s = jnp.sum(vals[:, sl] * x[cols[:, sl]], axis=0)
+        x = x.at[sl].set((bl_perm[sl] - s) / diag[sl])
+    return x

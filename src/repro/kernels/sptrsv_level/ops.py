@@ -1,0 +1,63 @@
+"""Jit'd wrapper: whole-matrix level-set solve using the level kernel."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import Schedule
+
+from .kernel import level_solve_blocks
+
+__all__ = ["make_solver"]
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return int(np.ceil(v / m) * m) if v else m
+
+
+def make_solver(
+    schedule: Schedule, *, interpret: bool = True, block_rows: int = 512
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build solve(b) that runs one Pallas kernel per level."""
+    n = schedule.n
+    n_pad = _ceil_to(n + 1, 128)
+    packed = []
+    for slab in schedule.slabs:
+        R_pad = _ceil_to(slab.R, block_rows if slab.R > block_rows // 4 else 128)
+        br = min(block_rows, R_pad)
+        rows = np.full((R_pad,), n, dtype=np.int32)
+        rows[: slab.R] = slab.rows
+        cols = np.zeros((slab.K, R_pad), np.int32)
+        cols[:, : slab.R] = slab.cols
+        vals = np.zeros((slab.K, R_pad), np.float32)
+        vals[:, : slab.R] = slab.vals
+        diag = np.ones((R_pad,), np.float32)
+        diag[: slab.R] = slab.diag
+        packed.append(
+            (
+                jnp.asarray(rows),
+                jnp.asarray(cols),
+                jnp.asarray(vals),
+                jnp.asarray(diag),
+                br,
+            )
+        )
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        dt = b.dtype
+        b_ext = jnp.concatenate([b, jnp.zeros((1,), dt)])
+        x = jnp.zeros((n_pad,), dt)
+        for rows, cols, vals, diag, br in packed:
+            bl = b_ext[jnp.minimum(rows, n)]
+            xl = level_solve_blocks(
+                x, bl, cols, vals.astype(dt), diag.astype(dt),
+                block_rows=br, interpret=interpret,
+            )
+            x = x.at[rows].set(xl)
+            x = x.at[n].set(0.0)  # pad rows target the scratch slot
+        return x[:n]
+
+    return solve

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the level kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["level_solve_ref"]
+
+
+def level_solve_ref(x_pad, bl, cols, vals, diag):
+    """xl[r] = (bl[r] - sum_k vals[k,r] * x[cols[k,r]]) / diag[r]"""
+    s = jnp.sum(vals * x_pad[cols], axis=0)
+    return (bl - s) / diag

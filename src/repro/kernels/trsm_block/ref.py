@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched block apply."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["block_apply_ref"]
+
+
+def block_apply_ref(dinv, rhs):
+    return jnp.einsum("bij,bj->bi", dinv, rhs)

@@ -1,0 +1,323 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``Executable.cost_analysis()`` counts a ``while`` body ONCE regardless
+of trip count, so any scanned program (layers, flash KV blocks, recurrences)
+under-reports FLOPs / bytes / collective traffic by the trip count.  This
+module re-derives the three roofline inputs from the partitioned, scheduled
+HLO text with full while-multiplier propagation:
+
+* **dot FLOPs**: every ``dot`` = 2 · |result| · |contracted dims| (shapes
+  from a per-computation symbol table; dots inside fusions are counted via
+  their called computations);
+* **HBM bytes**: Σ over scheduled instructions of result+operand bytes —
+  post-fusion this is a faithful HBM-traffic model (fusion internals stay in
+  registers and are *not* counted);
+* **collective wire bytes**: ring model per op kind, scaled like everything
+  else by the enclosing while trip counts.
+
+Trip counts are read from the while's condition computation (the loop bound
+is the ``s32[] constant(N)`` the induction variable compares against).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_module", "ModuleCosts"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%[\w.\-]+)")
+_OPERAND_RE = re.compile(r"\((%[\w.\-][^)]*)\)")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "after-all", "custom-call",
+               "get-dimension-size", "copy-start", "copy-done",
+               # pure layout/dtype ops: fused into consumers on TPU (a
+               # standalone `convert` of an int8 KV cache would otherwise
+               # count a phantom f32 materialization — measured 500x
+               # overcount on the qwen decode cell)
+               "convert", "broadcast", "reshape", "transpose", "copy",
+               "iota", "bitcast-convert", "pad"}
+
+
+def _type_info(ts: str, bf16_normalize: bool = False) -> Tuple[int, int]:
+    """(total bytes, total elements) of a type string (tuples summed).
+
+    ``bf16_normalize``: the CPU backend's float-normalization pass upcasts
+    every bf16 tensor to f32 at compile time (CPUs have no native bf16), so
+    the compiled-HLO byte widths overstate TPU traffic 2x for the bf16
+    compute path.  De-normalize: f32 tensors of rank >= 3 (activations,
+    attention blocks, cotangents) count at bf16 width; rank <= 2 f32
+    (master weights, gradient accumulators, optimizer state) stay f32.
+    """
+    b = e = 0
+    for m in _SHAPE_RE.finditer(ts):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dl:
+            n *= d
+        width = _DTYPE_BYTES[dt]
+        if bf16_normalize and dt == "f32" and len(dl) >= 3:
+            # raw rank >= 3: activations / attention tiles / stacked-scan
+            # cotangents (B_loc can be 1, so do not filter on dim size).
+            # Rank <= 2 f32 (weight masters, dW reductions, opt state)
+            # keeps f32 width.
+            width = 2
+        b += n * width
+        e += n
+    return b, e
+
+
+def _shape_dims(ts: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(ts)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    rtype: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symtab: Dict[str, str]
+
+
+def _split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            m = _COMP_HDR_RE.match(line)
+            if m and "{" in line:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                # parameters: shapes recoverable from signature if needed
+                continue
+            cur = None if line.startswith("}") else cur
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name = dm.group(1)
+        rest = line[line.index("=") + 1:].lstrip()
+        # result type = leading type tokens up to the op name
+        tm = re.match(r"((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)", rest)
+        if not tm:
+            continue
+        rtype, op = tm.group(1), tm.group(2)
+        ops_m = _OPERAND_RE.search(line[line.index(op) + len(op):])
+        operands = []
+        if ops_m:
+            operands = re.findall(r"%[\w.\-]+", ops_m.group(1))
+        cur.instrs.append(Instr(name, op, rtype, operands, line))
+        cur.symtab[name] = rtype
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.rtype.startswith("s32"):
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    rb, relem = _type_info(ins.rtype)
+    lhs_dims = None
+    if ins.operands:
+        lhs_t = symtab.get(ins.operands[0])
+        if lhs_t:
+            lhs_dims = _shape_dims(lhs_t)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contracted = 1
+    if m and lhs_dims is not None:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contracted *= lhs_dims[int(d)]
+    return 2.0 * relem * contracted
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    while_info: list = dataclasses.field(default_factory=list)
+    top_colls: list = dataclasses.field(default_factory=list)
+    top_hbm: list = dataclasses.field(default_factory=list)
+    # ^ (bytes·mult, op, result type, op_name metadata) — the "profile"
+    # used by the §Perf hypothesis loop to attribute traffic
+
+    def total_collective(self) -> float:
+        return float(sum(self.collective.values()))
+
+    def top_collectives(self, n: int = 15) -> list:
+        return sorted(self.top_colls, reverse=True)[:n]
+
+    def top_hbm_ops(self, n: int = 15) -> list:
+        return sorted(self.top_hbm, reverse=True)[:n]
+
+
+def parse_module(text: str, num_devices: int,
+                 bf16_normalize: bool = True) -> ModuleCosts:
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line[len("ENTRY "):].lstrip())
+            if m:
+                entry = m.group(1)
+            else:
+                m2 = re.match(r"ENTRY\s+(%[\w.\-]+)", line)
+                entry = m2.group(1) if m2 else None
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation named %main*
+        entry = next((n for n in comps if n.startswith("%main")), None)
+    out = ModuleCosts()
+    if entry is None:
+        return out
+
+    fused_flops_cache: Dict[str, float] = {}
+
+    def fusion_flops(cname: str) -> float:
+        """dot flops inside a fused computation (bytes NOT counted)."""
+        if cname in fused_flops_cache:
+            return fused_flops_cache[cname]
+        c = comps.get(cname)
+        total = 0.0
+        if c:
+            for ins in c.instrs:
+                if ins.op == "dot":
+                    total += _dot_flops(ins, c.symtab)
+                elif ins.op == "fusion" or ins.op == "call":
+                    for callee in _CALL_ATTR_RE.findall(ins.line):
+                        total += fusion_flops(callee)
+        fused_flops_cache[cname] = total
+        return total
+
+    def walk(cname: str, mult: float, depth: int = 0):
+        c = comps.get(cname)
+        if c is None or depth > 32:
+            return
+        for ins in c.instrs:
+            if ins.op == "while":
+                body = cond = None
+                bm = re.search(r"body=(%[\w.\-]+)", ins.line)
+                cm = re.search(r"condition=(%[\w.\-]+)", ins.line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                out.while_info.append((cname, body, trips))
+                if body:
+                    walk(body, mult * trips, depth + 1)
+                continue
+            if ins.op in ("call", "conditional"):
+                for callee in _CALL_ATTR_RE.findall(ins.line):
+                    walk(callee, mult, depth + 1)
+                continue
+            base = ins.op.replace("-start", "")
+            if base in _COLL and not ins.op.endswith("-done"):
+                g = _group_size(ins.line, num_devices)
+                if g > 1:
+                    rb, _ = _type_info(ins.rtype, bf16_normalize)
+                    if base == "all-gather":
+                        wire = (g - 1) / g * rb
+                    elif base == "all-reduce":
+                        wire = 2 * (g - 1) / g * rb
+                    elif base == "reduce-scatter":
+                        wire = (g - 1) * rb
+                    elif base == "all-to-all":
+                        wire = (g - 1) / g * rb
+                    else:
+                        wire = rb
+                    out.collective[base] += mult * wire
+                    out.coll_counts[base] += mult
+                    nm = re.search(r'op_name="([^"]*)"', ins.line)
+                    out.top_colls.append(
+                        (mult * wire, base, ins.rtype[:48],
+                         (nm.group(1)[-110:] if nm else cname)))
+            if ins.op == "dot":
+                out.dot_flops += mult * _dot_flops(ins, c.symtab)
+            elif ins.op == "fusion":
+                for callee in _CALL_ATTR_RE.findall(ins.line):
+                    out.dot_flops += mult * fusion_flops(callee)
+            # HBM traffic: result + operands of scheduled (non-control) ops
+            if ins.op == "dynamic-update-slice":
+                # in-place on TPU (buffer aliasing): traffic = the update
+                # slice written + read, not the whole buffer
+                if len(ins.operands) >= 2:
+                    t = c.symtab.get(ins.operands[1])
+                    if t:
+                        out.hbm_bytes += mult * 2 * _type_info(t, bf16_normalize)[0]
+            elif ins.op not in _SKIP_BYTES and not ins.op.endswith("-done"):
+                rb, _ = _type_info(ins.rtype, bf16_normalize)
+                ob = 0
+                for o in ins.operands:
+                    t = c.symtab.get(o)
+                    if t:
+                        ob += _type_info(t, bf16_normalize)[0]
+                tot = mult * (rb + ob)
+                out.hbm_bytes += tot
+                if tot > 1e9:
+                    nm = re.search(r'op_name="([^"]*)"', ins.line)
+                    out.top_hbm.append((tot, ins.op, ins.rtype[:48],
+                                        (nm.group(1)[-90:] if nm else cname)))
+        return
+
+    walk(entry, 1.0)
+    out.collective = dict(out.collective)
+    out.coll_counts = dict(out.coll_counts)
+    return out

@@ -1,0 +1,19 @@
+"""Model zoo: 10 assigned architectures on one shared layer library.
+
+Block kinds (cycled per-layer from ``ModelConfig.block_pattern``):
+  attn          full causal GQA attention
+  attn_local    sliding-window GQA attention
+  attn_bidir    bidirectional attention (encoder / prefix)
+  rec           RG-LRU recurrent block (Griffin/RecurrentGemma)
+  mlstm         xLSTM matrix-memory block (chunked parallel / recurrent decode)
+  slstm         xLSTM scalar-memory block (sequential scan)
+
+Families: decoder-only LM (dense & MoE), encoder-decoder (whisper), prefix-LM
+VLM (paligemma).  Modality frontends are stubs per assignment: input_specs()
+provide precomputed frame/patch embeddings.
+"""
+from .config import ARCHS, ModelConfig, get_config, smoke_config
+from .model import DistContext, Model
+
+__all__ = ["ARCHS", "ModelConfig", "get_config", "smoke_config",
+           "DistContext", "Model"]

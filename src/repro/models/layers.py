@@ -1,0 +1,441 @@
+"""Shared layer library for the 10-arch model zoo.
+
+Pure-functional: ``init_*`` builds param pytrees (plain dicts of jnp arrays,
+float32 masters), ``*_apply`` runs the layer in the compute dtype.  All
+attention goes through one flash implementation (`flash_attention`): an
+online-softmax ``lax.scan`` over key blocks with mask-aware block skipping,
+so full 32k prefill never materializes an S×S score matrix and sliding-window
+layers do sub-quadratic *compute* (skipped blocks are never executed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import runtime_flags
+from .config import ModelConfig
+
+__all__ = [
+    "RopeSpec", "rms_norm", "init_rms_norm", "init_dense", "dense",
+    "apply_rope", "flash_attention", "decode_attention",
+    "init_attention", "attention_apply", "attention_decode",
+    "init_mlp", "mlp_apply", "init_embedding", "embed_apply", "unembed_apply",
+    "sinusoidal_positions", "softcap",
+]
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dt)
+
+
+def init_dense(key, d_in: int, d_out, *, bias: bool = False, scale: float | None = None) -> dict:
+    shape = (d_in,) + (tuple(d_out) if isinstance(d_out, (tuple, list)) else (d_out,))
+    fan_in = d_in
+    std = scale if scale is not None else fan_in ** -0.5
+    p = {"w": jax.random.normal(key, shape, jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros(shape[1:], jnp.float32)
+    return p
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    w = params["w"].astype(x.dtype)
+    ndim_out = w.ndim - 1
+    y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    del ndim_out
+    return y
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def sinusoidal_positions(length: int, d: int, offset: int = 0) -> np.ndarray:
+    """Whisper-style fixed sinusoidal position table (host constant)."""
+    pos = np.arange(offset, offset + length, dtype=np.float64)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float64)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / d)
+    tab = np.zeros((length, d), dtype=np.float32)
+    tab[:, 0::2] = np.sin(pos * inv)
+    tab[:, 1::2] = np.cos(pos * inv)
+    return tab
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RopeSpec:
+    dim: int
+    theta: float = 10_000.0
+
+
+def _rope_angles(positions: jnp.ndarray, spec: RopeSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
+    half = spec.dim // 2
+    freq = spec.theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, spec: RopeSpec) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    sin, cos = _rope_angles(positions, spec)      # (..., S, half)
+    sin = sin[..., None, :]                       # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash attention (pure-JAX online softmax over key blocks)
+# --------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, kind: str, window: int, prefix_len: int):
+    """(Bq, Bk) boolean mask for one (query-block, key-block) pair."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if kind == "full":
+        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if kind == "causal":
+        return k <= q
+    if kind == "window":          # causal sliding window
+        return (k <= q) & (k > q - window)
+    if kind == "prefix":          # bidirectional prefix, causal after
+        return (k <= q) | (k < prefix_len)
+    raise ValueError(kind)
+
+
+def _blocks_needed(kind: str, qb: int, n_kb: int, bq: int, bk: int,
+                   window: int, seq_offset: int) -> range:
+    """Key-block range that can contain unmasked entries for query block qb
+    (static — computed at trace time; this is where window layers go
+    sub-quadratic in compute)."""
+    if kind == "full":
+        return range(n_kb)
+    q_lo = seq_offset + qb * bq
+    q_hi = q_lo + bq - 1
+    if kind in ("causal", "prefix"):
+        # prefix-LM: the bidirectional prefix lives in block 0 (prefix_len
+        # <= bk always holds for our configs), which causal already visits
+        return range(0, min(n_kb, q_hi // bk + 1))
+    if kind == "window":
+        lo = max(0, (q_lo - window + 1) // bk)
+        return range(lo, min(n_kb, q_hi // bk + 1))
+    raise ValueError(kind)
+
+
+def flash_attention(
+    q: jnp.ndarray,             # (B, Sq, Hq, hd)
+    k: jnp.ndarray,             # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,             # (B, Sk, Hkv, hd)
+    *,
+    kind: str = "causal",       # full | causal | window | prefix
+    window: int = 0,
+    prefix_len: int = 0,
+    seq_offset: int = 0,        # absolute position of q[0] (cross/cache use)
+    block_q: int = 0,           # 0 = auto (HLO-size-aware)
+    block_k: int = 0,
+    softcap_val: float = 0.0,
+) -> jnp.ndarray:
+    """Memory O(S·block); compute skips fully-masked key blocks."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    if block_k == 0:       # auto: cap trace-time unrolling at long seq_len
+        if kind == "window" and window >= 128:
+            block_k = min(window, 2048)
+        else:
+            block_k = 2048 if Sk > 8192 else 512
+    if block_q == 0:
+        block_q = 2048 if Sq > 8192 else 512
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad to block multiples
+    Sq_p = -(-Sq // bq) * bq
+    Sk_p = -(-Sk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    n_qb, n_kb = Sq_p // bq, Sk_p // bk
+    scale = hd ** -0.5
+
+    # (B, Hkv, g, n_qb, bq, hd)
+    q4 = qp.reshape(B, n_qb, bq, Hkv, g, hd).transpose(0, 3, 4, 1, 2, 5)
+    k4 = kp.reshape(B, n_kb, bk, Hkv, hd).transpose(0, 3, 1, 2, 4)
+    v4 = vp.reshape(B, n_kb, bk, Hkv, hd).transpose(0, 3, 1, 2, 4)
+
+    k_valid = (jnp.arange(Sk_p) < Sk).reshape(n_kb, bk)
+
+    out_blocks = []
+    for qb in range(n_qb):
+        qb_q = q4[:, :, :, qb]                        # (B, Hkv, g, bq, hd)
+        q_pos = seq_offset + qb * bq + jnp.arange(bq)
+        kbs = list(_blocks_needed(kind, qb, n_kb, bq, bk, window, seq_offset))
+        acc = jnp.zeros(qb_q.shape, jnp.float32)
+        m = jnp.full(qb_q.shape[:-1], NEG_INF, jnp.float32)
+        l = jnp.zeros(qb_q.shape[:-1], jnp.float32)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb_k, kb_v, mask = inp                    # (B,Hkv,bk,hd) (bq,bk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb_q.astype(jnp.float32),
+                           kb_k.astype(jnp.float32)) * scale
+            if softcap_val > 0.0:
+                s = softcap(s, softcap_val)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, kb_v.astype(jnp.float32))
+            return (acc, m_new, l), ()
+
+        # remat the kv step: without this, the scan's VJP stores every
+        # (bq, bk) score tile via dynamic-update-slice — 2x182 GB/dev of
+        # HBM traffic on qwen train_4k (flash attention must recompute
+        # tiles in backward, that is the whole point)
+        kv_step = jax.checkpoint(kv_step)
+        if kbs:
+            masks = []
+            for kb in kbs:
+                k_pos = kb * bk + jnp.arange(bk)
+                mask = _block_mask(q_pos, k_pos, kind, window, prefix_len)
+                masks.append(mask & k_valid[kb][None, :])
+            ks = jnp.stack([k4[:, :, kb] for kb in kbs], 0)
+            vs = jnp.stack([v4[:, :, kb] for kb in kbs], 0)
+            ms = jnp.stack(masks, 0)
+            unroll = (True if runtime_flags.UNROLL_SCANS
+                      and len(kbs) <= runtime_flags.UNROLL_LIMIT else 1)
+            (acc, m, l), _ = jax.lax.scan(kv_step, (acc, m, l), (ks, vs, ms),
+                                          unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_blocks.append(out.astype(q.dtype))
+
+    o = jnp.stack(out_blocks, axis=3)                 # (B,Hkv,g,n_qb,bq,hd)
+    o = o.transpose(0, 3, 4, 1, 2, 5).reshape(B, Sq_p, Hq, hd)
+    return o[:, :Sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, Hq, hd)
+    k_cache: jnp.ndarray,      # (B, S, Hkv, hd)
+    v_cache: jnp.ndarray,
+    cur_index: jnp.ndarray,    # scalar int — number of valid cache entries
+    *,
+    window: int = 0,           # 0 = full causal over cache
+    softcap_val: float = 0.0,
+    kv_scale: Optional[jnp.ndarray] = None,  # int8 cache dequant (B,S,Hkv)
+) -> jnp.ndarray:
+    """Single-token decode against a (possibly int8) KV cache."""
+    B, S, Hkv, hd = k_cache.shape
+    Hq = q.shape[2]
+    g = Hq // Hkv
+    kf = k_cache
+    vf = v_cache
+    if kv_scale is not None:
+        kf = kf.astype(jnp.float32) * kv_scale[..., 0][..., None]
+        vf = vf.astype(jnp.float32) * kv_scale[..., 1][..., None]
+    qf = q.reshape(B, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf.astype(jnp.float32)) * hd ** -0.5
+    if softcap_val > 0.0:
+        s = softcap(s, softcap_val)
+    pos = jnp.arange(S)
+    valid = pos[None, None, None, :] < cur_index
+    if window > 0:
+        valid = valid & (pos[None, None, None, :] >= cur_index - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, vf.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention block (GQA, optional cross-attention)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    D, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln": init_rms_norm(D),
+        "q": init_dense(ks[0], D, (Hq, hd), bias=cfg.qkv_bias),
+        "k": init_dense(ks[1], D, (Hkv, hd), bias=cfg.qkv_bias),
+        "v": init_dense(ks[2], D, (Hkv, hd), bias=cfg.qkv_bias),
+        "o": init_dense(ks[3], Hq * hd, D, scale=(Hq * hd) ** -0.5),
+    }
+    if cross:
+        p["ln_kv"] = init_rms_norm(D)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x, kv_src=None):
+    xq = x if kv_src is None else x
+    xkv = x if kv_src is None else kv_src
+    q = dense(params["q"], xq)
+    k = dense(params["k"], xkv)
+    v = dense(params["v"], xkv)
+    return q, k, v
+
+
+def attention_apply(
+    params: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,             # (B, S, D)
+    positions: jnp.ndarray,     # (B, S)
+    *,
+    kind: str = "causal",
+    kv_src: Optional[jnp.ndarray] = None,   # encoder states for cross-attn
+    rope: bool = True,
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    h = rms_norm(params["ln"], x)
+    src = rms_norm(params["ln_kv"], kv_src) if kv_src is not None else None
+    q, k, v = _qkv(params, cfg, h, src)
+    if rope and kv_src is None:
+        spec = RopeSpec(cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, positions, spec)
+        k = apply_rope(k, positions, spec)
+    o = flash_attention(
+        q, k, v, kind=kind, window=cfg.window, prefix_len=prefix_len,
+        softcap_val=cfg.logit_softcap,
+    )
+    B, S = x.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return x + dense(params["o"], o)
+
+
+def attention_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,             # (B, 1, D)
+    cache: dict,                # {"k","v": (B,S,Hkv,hd)[, "scale": (B,S,Hkv,2)]}
+    idx: jnp.ndarray,           # scalar int32 — tokens decoded so far
+    *,
+    local: bool = False,        # cache is a ring buffer of exactly window size
+    enc_out: Optional[jnp.ndarray] = None,
+    rope: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    h = rms_norm(params["ln"], x)
+    if enc_out is not None:
+        # cross-attention: static encoder KV, recomputed (nothing cached)
+        src = rms_norm(params["ln_kv"], enc_out)
+        q = dense(params["q"], h)
+        k = dense(params["k"], src)
+        v = dense(params["v"], src)
+        o = decode_attention(q, k, v, jnp.asarray(k.shape[1]),
+                             softcap_val=cfg.logit_softcap)
+        new_cache = cache
+    else:
+        q, k, v = _qkv(params, cfg, h)
+        if rope:
+            spec = RopeSpec(cfg.hd, cfg.rope_theta)
+            pos = jnp.broadcast_to(idx.astype(jnp.int32), (x.shape[0], 1))
+            q = apply_rope(q, pos, spec)
+            k = apply_rope(k, pos, spec)
+        S = cache["k"].shape[1]
+        slot = idx % S if local else idx            # ring buffer for local
+        cur = jnp.minimum(idx + 1, S) if local else idx + 1
+        if "scale" in cache:                        # int8 KV quantization
+            kq, ksc = _quantize_int8(k)
+            vq, vsc = _quantize_int8(v)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1)
+            sc = jnp.stack([ksc[:, 0], vsc[:, 0]], axis=-1)[:, None]  # (B,1,Hkv,2)
+            scale = jax.lax.dynamic_update_slice_in_dim(cache["scale"], sc, slot, 1)
+            new_cache = {"k": k_cache, "v": v_cache, "scale": scale}
+            o = decode_attention(q, k_cache, v_cache, cur,
+                                 softcap_val=cfg.logit_softcap, kv_scale=scale)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, 1)
+            new_cache = {"k": k_cache, "v": v_cache}
+            o = decode_attention(q, k_cache, v_cache, cur,
+                                 softcap_val=cfg.logit_softcap)
+    B = x.shape[0]
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return x + dense(params["o"], o), new_cache
+
+
+def _quantize_int8(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,1,H,hd) -> int8 values + per (B,1,H) scale."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=False)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.round(t.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": init_rms_norm(D),
+        "wi": init_dense(ks[0], D, F),
+        "wg": init_dense(ks[1], D, F),
+        "wo": init_dense(ks[2], F, D, scale=F ** -0.5),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, *, residual: bool = True) -> jnp.ndarray:
+    h = rms_norm(params["ln"], x)
+    y = dense(params["wo"], jax.nn.silu(dense(params["wg"], h)) * dense(params["wi"], h))
+    return x + y if residual else y
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    V = cfg.vocab_pad
+    p = {"tok": jax.random.normal(key, (V, cfg.d_model), jnp.float32)}
+    if not cfg.tied_embeddings:
+        p["out"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (V, cfg.d_model), jnp.float32
+        ) * cfg.d_model ** -0.5
+    return p
+
+
+def embed_apply(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                dtype=jnp.bfloat16) -> jnp.ndarray:
+    e = params["tok"].astype(dtype)[tokens]
+    return e * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+
+def unembed_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    table = params.get("out", params["tok"]).astype(x.dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    if cfg.logit_softcap > 0.0:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits

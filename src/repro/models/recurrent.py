@@ -1,0 +1,359 @@
+"""Recurrent blocks: RG-LRU (recurrentgemma/Griffin), mLSTM & sLSTM (xLSTM).
+
+Training-time parallelization of the RG-LRU gated recurrence uses
+`repro.core.recurrence.linear_recurrence(method="doubling")` — the paper's
+equation-rewriting transformation specialized to the chain dependency graph
+(see that module's docstring).  mLSTM uses the chunkwise-parallel form
+(intra-chunk quasi-attention + inter-chunk state scan).  sLSTM is inherently
+sequential (scalar memory mixing) and runs as a `lax.scan` — its O(T) levels
+are exactly the un-rewritable part of the DAG.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.recurrence import linear_recurrence
+from . import runtime_flags
+from .config import ModelConfig
+from .layers import dense, init_dense, init_rms_norm, rms_norm
+
+__all__ = [
+    "init_rglru_block", "rglru_block_apply", "rglru_block_decode",
+    "init_mlstm_block", "mlstm_block_apply", "mlstm_block_decode",
+    "init_slstm_block", "slstm_block_apply", "slstm_block_decode",
+]
+
+_RGLRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# causal depthwise temporal conv
+# --------------------------------------------------------------------------
+
+def _init_conv(key, d: int, width: int) -> dict:
+    return {"w": jax.random.normal(key, (width, d), jnp.float32) * width ** -0.5,
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _causal_conv(p: dict, x: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """x (B,S,d); state (B,W-1,d) carries history for decode. Returns y, new_state."""
+    W = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, k : k + x.shape[1]] * w[k] for k in range(W))
+    y = y + p["b"].astype(x.dtype)
+    return y, xp[:, -(W - 1):]
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# --------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    R = cfg.d_rnn or D
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": init_rms_norm(D),
+        "in_x": init_dense(ks[0], D, R),
+        "in_gate": init_dense(ks[1], D, R),
+        "conv": _init_conv(ks[2], R, cfg.conv_width),
+        "w_a": init_dense(ks[3], R, R),          # recurrence gate
+        "w_i": init_dense(ks[4], R, R),          # input gate
+        # Λ init so that a = sigmoid(Λ) ∈ [0.9, 0.999]
+        "lam": jnp.asarray(
+            np.log(np.linspace(0.9, 0.999, R) / (1 - np.linspace(0.9, 0.999, R))),
+            jnp.float32),
+        "out": init_dense(ks[5], R, D, scale=R ** -0.5),
+    }
+
+
+def _rglru_gates(p, u):
+    """u (.., R) conv output -> (log_a, gated input) both f32."""
+    r = jax.nn.sigmoid(dense(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_i"], u).astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])          # log a_t  (<0)
+    x_in = i * u.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, mult * x_in
+
+
+def rglru_block_apply(params, cfg: ModelConfig, x: jnp.ndarray,
+                      *, method: str = "doubling") -> jnp.ndarray:
+    h = rms_norm(params["ln"], x)
+    gate = jax.nn.gelu(dense(params["in_gate"], h))
+    u = dense(params["in_x"], h)
+    u, _ = _causal_conv(params["conv"], u)
+    log_a, xin = _rglru_gates(params, u)
+    # h_t = a_t h_{t-1} + xin_t  — equation-rewriting-derived parallel scan
+    hs = linear_recurrence(jnp.exp(log_a), xin, method=method, axis=1)
+    y = hs.astype(x.dtype) * gate
+    return x + dense(params["out"], y)
+
+
+def rglru_block_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: dict):
+    """x (B,1,D); cache {"h": (B,R) f32, "conv": (B,W-1,R)}."""
+    h = rms_norm(params["ln"], x)
+    gate = jax.nn.gelu(dense(params["in_gate"], h))
+    u = dense(params["in_x"], h)
+    u, conv_state = _causal_conv(params["conv"], u, cache["conv"])
+    log_a, xin = _rglru_gates(params, u)
+    h_new = jnp.exp(log_a[:, 0]) * cache["h"] + xin[:, 0]       # (B,R)
+    y = h_new[:, None].astype(x.dtype) * gate
+    out = x + dense(params["out"], y)
+    return out, {"h": h_new, "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory, chunkwise-parallel training
+# --------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    Din = 2 * D                 # pf=2 up-projection
+    H = cfg.n_state_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": init_rms_norm(D),
+        "up": init_dense(ks[0], D, 2 * Din),        # (inner, gate)
+        "conv": _init_conv(ks[1], Din, cfg.conv_width),
+        "q": init_dense(ks[2], Din, (H, Din // H)),
+        "k": init_dense(ks[3], Din, (H, Din // H)),
+        "v": init_dense(ks[4], Din, (H, Din // H)),
+        "ig": init_dense(ks[5], Din, H),            # log-space input gate
+        "fg": init_dense(ks[6], Din, H),            # forget gate (pre-sigmoid)
+        "down": init_dense(ks[7], Din, D, scale=Din ** -0.5),
+        "skip": init_dense(ks[8], Din, Din),
+    }
+
+
+def _mlstm_qkv(params, xi):
+    q = dense(params["q"], xi)
+    k = dense(params["k"], xi) * (params["q"]["w"].shape[-1]) ** -0.5
+    v = dense(params["v"], xi)
+    li = dense(params["ig"], xi).astype(jnp.float32)                 # log i_t
+    lf = jax.nn.log_sigmoid(dense(params["fg"], xi).astype(jnp.float32))  # log f_t
+    return q, k, v, li, lf
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, chunk: int, state=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,d); li,lf: (B,S,H).  Returns h (B,S,H,d) and final
+    (C (B,H,d,d), n (B,H,d), m (B,H)).
+    """
+    B, S, H, d = q.shape
+    W = min(chunk, S)
+    assert S % W == 0, (S, W)
+    nc = S // W
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, W, H, d).astype(f32)
+    kc = k.reshape(B, nc, W, H, d).astype(f32)
+    vc = v.reshape(B, nc, W, H, d).astype(f32)
+    lic = li.reshape(B, nc, W, H)
+    lfc = lf.reshape(B, nc, W, H)
+    if state is None:
+        C0 = jnp.zeros((B, H, d, d), f32)
+        n0 = jnp.zeros((B, H, d), f32)
+        m0 = jnp.full((B, H), -1e30, f32)
+    else:
+        C0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((W, W), bool))
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry
+        qw, kw, vw, liw, lfw = inp          # (B,W,H,d), (B,W,H)
+        b = jnp.cumsum(lfw, axis=1)         # (B,W,H)  cumulative log-forget
+        # intra-chunk log weights:  D[t,s] = b_t - b_s + li_s  (s<=t)
+        Dm = b[:, :, None] - b[:, None, :, :] + liw[:, None]   # (B,W,W,H)
+        Dm = jnp.where(tri[None, :, :, None], Dm, -1e30)
+        m_intra = Dm.max(axis=2)                                # (B,W,H)
+        m_t = jnp.maximum(b + m0[:, None], m_intra)             # (B,W,H)
+        m_t = jnp.maximum(m_t, -1e30)
+        wgt = jnp.exp(Dm - m_t[:, :, None])                     # (B,W,W,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qw, kw)          # (B,W,W,H)
+        inter_scale = jnp.exp(b + m0[:, None] - m_t)            # (B,W,H)
+        h_num = (jnp.einsum("btsh,btsh,bshd->bthd", wgt, scores, vw)
+                 + inter_scale[..., None]
+                 * jnp.einsum("bhde,bthd->bthe", C0, qw))
+        # denominator: n_t^T q_t with the same weights
+        n_q = (jnp.einsum("btsh,btsh->bth", wgt, scores)
+               + inter_scale * jnp.einsum("bhd,bthd->bth", n0, qw))
+        denom = jnp.maximum(jnp.abs(n_q), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+        # chunk-end state
+        bW = b[:, -1]                                           # (B,H)
+        m_end = jnp.maximum(bW + m0, (bW[:, None] - b + liw).max(axis=1))
+        g_in = jnp.exp(bW[:, None] - b + liw - m_end[:, None])  # (B,W,H)
+        C1 = (jnp.exp(bW + m0 - m_end)[:, :, None, None] * C0
+              + jnp.einsum("bwh,bwhd,bwhe->bhde", g_in, kw, vw))
+        n1 = (jnp.exp(bW + m0 - m_end)[:, :, None] * n0
+              + jnp.einsum("bwh,bwhd->bhd", g_in, kw))
+        return (C1, n1, m_end), h
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lic.transpose(1, 0, 2, 3),
+          lfc.transpose(1, 0, 2, 3))
+    unroll = (True if runtime_flags.UNROLL_SCANS
+              and nc <= runtime_flags.UNROLL_LIMIT else 1)
+    (C1, n1, m1), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs, unroll=unroll)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, d)
+    return h, (C1, n1, m1)
+
+
+def mlstm_block_apply(params, cfg: ModelConfig, x: jnp.ndarray,
+                      *, chunk: int = 0) -> jnp.ndarray:
+    B, S, D = x.shape
+    if chunk == 0:   # adaptive: keep chunk count <= UNROLL_LIMIT
+        chunk = 256 if S <= 16384 else -(-S // runtime_flags.UNROLL_LIMIT)
+    h = rms_norm(params["ln"], x)
+    up = dense(params["up"], h)
+    xi, gate = jnp.split(up, 2, axis=-1)
+    xi, _ = _causal_conv(params["conv"], xi)
+    xi = jax.nn.silu(xi)
+    q, k, v, li, lf = _mlstm_qkv(params, xi)
+    hh, _ = _mlstm_chunk_scan(q, k, v, li, lf, chunk)
+    H, d = q.shape[2], q.shape[3]
+    y = hh.astype(x.dtype).reshape(B, S, H * d) + dense(params["skip"], xi)
+    y = y * jax.nn.silu(gate)
+    return x + dense(params["down"], y)
+
+
+def mlstm_block_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: dict):
+    """cache {"C": (B,H,d,d) f32, "n": (B,H,d), "m": (B,H), "conv": (B,W-1,Din)}."""
+    B = x.shape[0]
+    h = rms_norm(params["ln"], x)
+    up = dense(params["up"], h)
+    xi, gate = jnp.split(up, 2, axis=-1)
+    xi, conv_state = _causal_conv(params["conv"], xi, cache["conv"])
+    xi = jax.nn.silu(xi)
+    q, k, v, li, lf = _mlstm_qkv(params, xi)
+    q0, k0, v0 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,d)
+    li0, lf0 = li[:, 0], lf[:, 0]                                   # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf0 + m, li0)
+    fs = jnp.exp(lf0 + m - m_new)
+    is_ = jnp.exp(li0 - m_new)
+    C1 = fs[..., None, None] * C + is_[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k0, v0)
+    n1 = fs[..., None] * n + is_[..., None] * k0
+    num = jnp.einsum("bhde,bhd->bhe", C1, q0)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n1, q0)), jnp.exp(-m_new))
+    hh = (num / den[..., None]).astype(x.dtype)                     # (B,H,d)
+    H, d = hh.shape[1], hh.shape[2]
+    y = hh.reshape(B, 1, H * d) + dense(params["skip"], xi)
+    y = y * jax.nn.silu(gate)
+    out = x + dense(params["down"], y)
+    return out, {"C": C1, "n": n1, "m": m_new,
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, sequential scan
+# --------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H = cfg.n_state_heads
+    dh = D // H
+    ks = jax.random.split(key, 10)
+    F = int(D * 4 / 3) // 8 * 8         # pf = 4/3 post-FFN
+    return {
+        "ln": init_rms_norm(D),
+        "conv": _init_conv(ks[0], D, cfg.conv_width),
+        "wz": init_dense(ks[1], D, D),
+        "wi": init_dense(ks[2], D, D),
+        "wf": init_dense(ks[3], D, D),
+        "wo": init_dense(ks[4], D, D),
+        # block-diagonal recurrent weights, one (dh, dh) block per head
+        "rz": jax.random.normal(ks[5], (H, dh, dh), jnp.float32) * dh ** -0.5,
+        "ri": jax.random.normal(ks[6], (H, dh, dh), jnp.float32) * dh ** -0.5,
+        "rf": jax.random.normal(ks[7], (H, dh, dh), jnp.float32) * dh ** -0.5,
+        "ro": jax.random.normal(ks[8], (H, dh, dh), jnp.float32) * dh ** -0.5,
+        "gn": init_rms_norm(D),
+        "ffn": {"wi": init_dense(ks[9], D, F),
+                "wo": init_dense(jax.random.fold_in(ks[9], 1), F, D, scale=F ** -0.5)},
+    }
+
+
+def _slstm_cell(params, H, dh, wx, carry):
+    """One time step.  wx: dict of (B,D) pre-activations from inputs;
+    carry: (c, n, m, h) each (B,D)-ish f32."""
+    c, n, m, h = carry
+    hb = h.reshape(h.shape[0], H, dh)
+
+    def rec(name):
+        return jnp.einsum("bhd,hde->bhe", hb, params[name]).reshape(h.shape)
+
+    z = jnp.tanh(wx["z"] + rec("rz"))
+    li = wx["i"] + rec("ri")                       # log-space input gate
+    lf = jax.nn.log_sigmoid(wx["f"] + rec("rf"))
+    o = jax.nn.sigmoid(wx["o"] + rec("ro"))
+    m_new = jnp.maximum(lf + m, li)
+    i_ = jnp.exp(li - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block_apply(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, D = x.shape
+    H = cfg.n_state_heads
+    dh = D // H
+    h0 = rms_norm(params["ln"], x)
+    u, _ = _causal_conv(params["conv"], h0)
+    u = jax.nn.silu(u)
+    wz = dense(params["wz"], h0).astype(jnp.float32)
+    wi = dense(params["wi"], u).astype(jnp.float32)
+    wf = dense(params["wf"], u).astype(jnp.float32)
+    wo = dense(params["wo"], h0).astype(jnp.float32)
+
+    def body(carry, t_in):
+        z, i, f, o = t_in
+        carry = _slstm_cell(params, H, dh, {"z": z, "i": i, "f": f, "o": o}, carry)
+        return carry, carry[3]
+
+    zero = jnp.zeros((B, D), jnp.float32)
+    init = (zero, zero, jnp.full((B, D), -1e30, jnp.float32), zero)
+    xs = tuple(t.transpose(1, 0, 2) for t in (wz, wi, wf, wo))
+    _, hs = jax.lax.scan(body, init, xs)
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rms_norm(params["gn"], y)
+    x = x + y
+    # gated FFN (pf = 4/3)
+    f = dense(params["ffn"]["wo"], jax.nn.gelu(dense(params["ffn"]["wi"], x)))
+    return x + f
+
+
+def slstm_block_decode(params, cfg: ModelConfig, x: jnp.ndarray, cache: dict):
+    """cache {"c","n","m","h": (B,D) f32, "conv": (B,W-1,D)}."""
+    B, _, D = x.shape
+    H = cfg.n_state_heads
+    dh = D // H
+    h0 = rms_norm(params["ln"], x)
+    u, conv_state = _causal_conv(params["conv"], h0, cache["conv"])
+    u = jax.nn.silu(u)
+    wx = {
+        "z": dense(params["wz"], h0)[:, 0].astype(jnp.float32),
+        "i": dense(params["wi"], u)[:, 0].astype(jnp.float32),
+        "f": dense(params["wf"], u)[:, 0].astype(jnp.float32),
+        "o": dense(params["wo"], h0)[:, 0].astype(jnp.float32),
+    }
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = _slstm_cell(params, H, dh, wx, carry)
+    y = rms_norm(params["gn"], h[:, None].astype(x.dtype))
+    x = x + y
+    f = dense(params["ffn"]["wo"], jax.nn.gelu(dense(params["ffn"]["wi"], x)))
+    out = x + f
+    return out, {"c": c, "n": n, "m": m, "h": h,
+                 "conv": conv_state.astype(cache["conv"].dtype)}

@@ -1,0 +1,23 @@
+"""Process-wide execution-mode flags.
+
+``UNROLL_SCANS`` — set by the dry-run driver.  XLA's ``cost_analysis``
+counts a ``while`` body ONCE regardless of trip count, so a scanned-layers
+model under-reports FLOPs/collective-bytes by ~num_reps×.  The dry-run
+therefore unrolls the layer-repetition scan, the flash-attention KV scan and
+the mLSTM chunk scan (trace-time ``lax.scan(..., unroll=True)``) so the
+roofline terms are exact.  Training keeps scans rolled (compile time
+O(pattern), not O(depth)).
+
+The sLSTM timestep scan (T = seq_len iterations) is never unrolled — its
+FLOPs are added analytically in the roofline report (documented in
+EXPERIMENTS.md; xlstm-350m only).
+"""
+UNROLL_SCANS = False
+
+# cap for unrolling inner scans (kv blocks / chunks); beyond this the scan
+# stays rolled and the undercount is corrected analytically
+UNROLL_LIMIT = 64
+
+
+def scan_unroll() -> bool | int:
+    return True if UNROLL_SCANS else 1

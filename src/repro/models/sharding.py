@@ -1,0 +1,240 @@
+"""Sharding rules: param / batch / cache PartitionSpecs for any mesh.
+
+Logical axes:
+  ``dp``    batch        -> ("pod","data") on the multi-pod mesh, else "data"
+  ``fsdp``  param shards -> "data"  (ZeRO-3; pod-replicated so the gradient
+                            all-reduce is the only cross-pod collective)
+  ``tp``    tensor       -> "model" (Megatron: heads / d_ff / vocab)
+  ``ep``    experts      -> "model"
+
+Dims are sharded **only when divisible** by the mesh axis size; otherwise the
+dim is replicated (e.g. qwen's 40 heads on model=16 → attention projections
+stay fsdp-only and TP lives in d_ff/vocab).  This keeps every (arch × mesh)
+cell compilable without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+__all__ = [
+    "ShardingPolicy", "POLICIES", "dp_axes", "axis_size", "param_specs",
+    "batch_specs", "cache_specs", "shard_params", "opt_state_specs",
+]
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Logical->mesh axis mapping.
+
+    ``2d`` (default): batch over data, FSDP over data, TP/EP over model —
+    the Megatron+ZeRO hybrid.
+    ``fsdp_only``: batch AND parameters sharded over (data, model) jointly —
+    pure ZeRO-3.  No tensor parallelism, so the per-sublayer Megatron
+    all-reduces disappear; the only collectives are per-layer weight
+    all-gathers + gradient reduce-scatter (Perf iteration 4: on
+    gemma3-12b train_4k this cut the collective term ~5x).  Requires
+    global_batch % 256 == 0; MoE archs keep ``2d`` (experts need the model
+    axis for EP).
+    """
+    name: str = "2d"
+    fsdp: tuple = ("data",)
+    tp: str | None = "model"
+    dp: tuple = ("data",)
+
+
+POLICIES = {
+    "2d": ShardingPolicy(),
+    "fsdp_only": ShardingPolicy(name="fsdp_only", fsdp=("data", "model"),
+                                tp=None, dp=("data", "model")),
+}
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def _div(dim: int, mesh: Mesh, ax) -> bool:
+    return dim % axis_size(mesh, ax) == 0 and axis_size(mesh, ax) > 1
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _rule(ps: str, shape: tuple, mesh: Mesh, cfg: ModelConfig,
+          policy: "ShardingPolicy" = None) -> P:
+    """Spec for one param given its path string and (unstacked) shape."""
+    policy = policy or POLICIES["2d"]
+    fsdp = policy.fsdp if len(policy.fsdp) > 1 else policy.fsdp[0]
+    tp = policy.tp
+
+    def ax(dim_size, name):
+        if name is None:
+            return None
+        return name if _div(dim_size, mesh, name) else None
+
+    # embeddings: (V_pad, D)
+    if ps.endswith("embed/tok") or ps.endswith("embed/out"):
+        return P(ax(shape[0], tp), ax(shape[1], fsdp))
+    if "patch_proj" in ps:
+        return P(ax(shape[0], fsdp), ax(shape[1], tp))
+    # MoE stacked experts: (E, D, F) / (E, F, D)
+    if any(ps.endswith(f"ffn/{w}") for w in ("wi", "wg", "wo")) and len(shape) == 3:
+        return P(ax(shape[0], tp), ax(shape[1], fsdp), None)
+    if "router" in ps:
+        return P(ax(shape[0], fsdp), None)
+    # attention projections
+    if any(f"/{n}/w" in ps for n in ("q", "k", "v")) and len(shape) == 3:
+        return P(ax(shape[0], fsdp), ax(shape[1], tp), None)
+    if any(f"/{n}/b" in ps for n in ("q", "k", "v")) and len(shape) == 2:
+        return P(ax(shape[0], tp), None)
+    if "/o/w" in ps:
+        return P(ax(shape[0], tp), ax(shape[1], fsdp))
+    # MLP
+    if any(ps.endswith(f"/{n}/w") for n in ("wi", "wg")) and len(shape) == 2:
+        return P(ax(shape[0], fsdp), ax(shape[1], tp))
+    if ps.endswith("/wo/w") and len(shape) == 2:
+        return P(ax(shape[0], tp), ax(shape[1], fsdp))
+    # RG-LRU / LSTM / conv / misc dense (D_in, D_out)
+    if len(shape) == 2 and shape[0] >= 128 and shape[1] >= 128:
+        return P(ax(shape[0], fsdp), ax(shape[1], tp))
+    if len(shape) == 3 and min(shape[1], shape[2]) >= 128:   # (H, dh, dh) blocks
+        # tiny per-head recurrent weights used *inside* lax.scan: replicate —
+        # sharding them forces an all-gather every timestep (measured: the
+        # dominant collective term on xlstm before this rule)
+        if int(np.prod(shape)) * 4 <= 16 * 2**20:
+            return P(None, None, None)
+        return P(None, ax(shape[1], fsdp), ax(shape[2], tp))
+    if len(shape) == 1 and shape[0] >= 1024:
+        return P(ax(shape[0], tp))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, mesh: Mesh, cfg: ModelConfig,
+                policy: "ShardingPolicy" = None):
+    """PartitionSpec pytree matching ``params`` (stacked blocks get a leading
+    None for the reps axis)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = ps.startswith("blocks/") or "/blocks/" in ps
+        if stacked:
+            spec = _rule(ps, shape[1:], mesh, cfg, policy)
+            return P(None, *spec)
+        return _rule(ps, shape, mesh, cfg, policy)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def shard_params(params, mesh: Mesh, cfg: ModelConfig,
+                 policy: "ShardingPolicy" = None):
+    specs = param_specs(params, mesh, cfg, policy)
+    return jax.device_put(
+        params, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+
+
+def batch_specs(mesh: Mesh, batch_shape: dict) -> dict:
+    """Input specs: batch dim over dp when divisible, else replicated."""
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+
+    def one(leaf):
+        B = leaf.shape[0] if leaf.shape else 1
+        if B % ndp == 0 and B >= ndp:
+            return P(dp if len(dp) > 1 else dp[0], *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache: Any, mesh: Mesh, cfg: ModelConfig):
+    """KV caches: batch over dp when divisible; otherwise (long-context,
+    batch=1) the sequence dim is sharded over (data, model) — sequence
+    parallelism for decode.  Recurrent state: batch over dp, feature over
+    model when divisible."""
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+    dp_name = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = "blocks/" in ps
+        core = shape[1:] if stacked else shape
+        if ps.endswith("idx") or not core:
+            return P(*([None] * len(shape)))
+        B = core[0]
+        spec: list = [None] * len(core)
+        if B % ndp == 0 and B >= ndp:
+            spec[0] = dp_name
+            if len(core) == 4 and _div(core[1], mesh, "model"):      # (B,S,H,hd)
+                spec[1] = "model"
+            elif len(core) >= 2 and _div(core[-1], mesh, "model"):
+                spec[-1] = "model"
+        else:
+            # batch too small: shard the biggest dim over everything divisible
+            if len(core) == 4:                                        # (B,S,H,hd)
+                both = tuple(dp) + ("model",)
+                if core[1] % axis_size(mesh, both) == 0:
+                    spec[1] = both
+                elif _div(core[1], mesh, "data"):
+                    spec[1] = "data"
+            elif len(core) >= 2 and _div(core[-1], mesh, "model"):
+                spec[-1] = "model"
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def opt_state_specs(param_spec_tree, opt_state):
+    """Optimizer moments share their param's spec; scalars replicated."""
+
+    def match(spec, leaf):
+        if leaf.ndim == len(spec):
+            return spec
+        return P(*([None] * leaf.ndim))
+
+    import jax.tree_util as jtu
+
+    flat_specs = jtu.tree_leaves(param_spec_tree)
+
+    # opt states are pytrees whose array leaves mirror params in order where
+    # shaped like them; fall back to replication otherwise.
+    def one_state(state_tree, specs):
+        leaves, treedef = jtu.tree_flatten(state_tree)
+        out = []
+        for l in leaves:
+            cand = None
+            for s in specs:
+                if len(s) == l.ndim:
+                    cand = s
+                    break
+            out.append(cand if cand is not None else P(*([None] * l.ndim)))
+        return jtu.tree_unflatten(treedef, out)
+
+    return one_state(opt_state, flat_specs)

@@ -1,0 +1,164 @@
+"""Optimizers, hand-rolled (no optax offline) with FSDP-friendly state.
+
+Every optimizer's state is a dict of pytrees **mirroring the param tree**
+(``{"m": like_params, "v": like_params, "step": scalar}``), so optimizer
+state inherits the parameter PartitionSpecs unchanged — ZeRO-3 for free.
+
+Adafactor keeps a factored second moment (row/col means) for ≥2-D params:
+for arctic-480b the AdamW moments alone would exceed a 256-chip pod, the
+factored state is ~0.1% of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd_momentum",
+           "clip_by_global_norm", "cosine_schedule", "get_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * (step + 1) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule: Optional[Callable] = None) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = schedule(step) if schedule else lr
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update, "adamw")
+
+
+def sgd_momentum(lr=1e-2, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, schedule: Optional[Callable] = None) -> Optimizer:
+    """Factored second moment for ndim>=2 (factored over the last two dims),
+    full second moment for vectors.  No first moment (momentum-free)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+        lr_t = schedule(step) if schedule else lr
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * f["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = g / jnp.sqrt(jnp.maximum(
+                    vr[..., None] * vc[..., None, :] / denom[..., None], eps))
+                new_f = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_f = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_f
+
+        out = jax.tree_util.tree_map_with_path(
+            lambda path, g, p: upd(g, _get(state["f"], path), p), grads, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_f = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"f": new_f, "step": step}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def _get(tree, path):
+    for p in path:
+        key = p.key if hasattr(p, "key") else p.idx
+        tree = tree[key]
+    return tree
+
+
+def get_optimizer(name: str, lr: float = 3e-4, total_steps: int = 10_000,
+                  **kw) -> Optimizer:
+    sched = cosine_schedule(lr, min(100, total_steps // 10), total_steps)
+    if name == "adamw":
+        return adamw(lr, schedule=sched, **kw)
+    if name == "adafactor":
+        return adafactor(lr, schedule=sched, **kw)
+    if name == "sgd":
+        return sgd_momentum(lr, **kw)
+    if name == "tripre":
+        from .tripre import tripre
+        return tripre(lr, schedule=sched, **kw)
+    raise ValueError(name)

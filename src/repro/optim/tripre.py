@@ -1,0 +1,150 @@
+"""``tripre`` — triangular-solve-preconditioned optimizer.
+
+The paper's kernel as a first-class *training* feature: a Shampoo-lite
+second-order method whose inverse-root application is replaced by two
+sparse triangular solves.
+
+Per 2-D parameter W (d_in × d_out), maintain a Gram accumulator
+``G ← β G + (1-β) g gᵀ`` over the smaller dimension, sparsified to a banded
+pattern (keep a ``band``-wide diagonal band — the IC(0)-style pattern).  Each
+update factors ``G + λI ≈ L Lᵀ`` (incomplete Cholesky on the band) and
+preconditions the gradient by solving
+
+    L y = g,   Lᵀ z = y            (two SpTRSVs)
+
+with the **level-set executor from repro.core** — including equation
+rewriting when the band structure produces thin levels.  For banded L the
+dependency DAG is near-chain, i.e. exactly the regime the paper targets.
+
+This is deliberately a demonstration-grade optimizer (small/medium models;
+the factorization runs on host at refresh steps), wired into train.py via
+``--optimizer tripre`` and exercised by tests + the `examples/tripre_lm.py`
+driver.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .optimizers import Optimizer
+
+__all__ = ["tripre", "banded_ichol", "make_banded_solvers"]
+
+
+def banded_ichol(G: np.ndarray, band: int, shift: float = 1e-3) -> np.ndarray:
+    """Incomplete Cholesky restricted to a band; returns dense banded L."""
+    n = G.shape[0]
+    A = G + shift * np.eye(n) * max(np.trace(G) / n, 1.0)
+    L = np.zeros_like(A)
+    for i in range(n):
+        lo = max(0, i - band)
+        for j in range(lo, i + 1):
+            s = A[i, j] - L[i, lo:j] @ L[j, lo:j]
+            if j < i:
+                L[i, j] = s / L[j, j] if L[j, j] != 0 else 0.0
+            else:
+                L[i, i] = np.sqrt(max(s, 1e-12))
+    return L
+
+
+def make_banded_solvers(L_np: np.ndarray, *, use_rewrite: bool = True):
+    """Build matrix-specialized forward/backward solvers for banded L using
+    the paper pipeline (level sets + equation rewriting + codegen)."""
+    from repro.core.csr import from_dense
+    from repro.core.rewrite import RewriteConfig
+    from repro.core.solver import SpTRSV
+
+    L = from_dense(L_np)
+    Lt = from_dense(L_np.T.copy())
+    # upper-triangular solve == lower-triangular solve on the reversed system
+    P = np.arange(L_np.shape[0])[::-1]
+    Lt_rev = from_dense(L_np.T[np.ix_(P, P)].copy())
+    rw = RewriteConfig(thin_threshold=2, max_fill_ratio=4.0) if use_rewrite else None
+    fwd = SpTRSV.build(L, strategy="levelset", rewrite=rw)
+    bwd = SpTRSV.build(Lt_rev, strategy="levelset", rewrite=rw)
+
+    def solve(g: jnp.ndarray) -> jnp.ndarray:
+        y = fwd.solve(g)
+        z_rev = bwd.solve(y[::-1])
+        return z_rev[::-1]
+
+    del Lt
+    return solve, fwd, bwd
+
+
+def tripre(lr=3e-4, b1=0.9, beta_g=0.95, band: int = 8,
+           refresh_every: int = 20, max_dim: int = 4096,
+           weight_decay: float = 0.0,
+           schedule: Optional[Callable] = None) -> Optimizer:
+    """Momentum + banded-Gram triangular preconditioning.
+
+    State: momentum m (like params), Gram G per eligible 2-D param (d×d on
+    the smaller side, d <= max_dim), step counter.  The L factors live
+    host-side in a closure cache keyed by param path, refreshed every
+    ``refresh_every`` steps (host callback pattern — factorization is a
+    preprocessing step, exactly like the paper's matrix-analysis module).
+    """
+    cache: dict = {}
+
+    def eligible(p):
+        return p.ndim == 2 and min(p.shape) <= max_dim
+
+    def init(params):
+        def gram(p):
+            if eligible(p):
+                d = min(p.shape)
+                return jnp.zeros((d, d), jnp.float32)
+            return jnp.zeros((0, 0), jnp.float32)
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "G": jax.tree.map(gram, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        """NOTE: not fully jittable (host factorization at refresh); the
+        train loop calls tripre outside jit or via io_callback — documented
+        trade-off of the demonstration optimizer."""
+        step = int(state["step"]) + 1
+        lr_t = float(schedule(jnp.asarray(step)) if schedule else lr)
+
+        flat_g, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_G = jax.tree_util.tree_leaves(state["G"])
+
+        new_p, new_m, new_G = [], [], []
+        for (path, g), p, m, G in zip(flat_g, flat_p, flat_m, flat_G):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            u = m
+            if eligible(p):
+                gm = g if p.shape[0] <= p.shape[1] else g.T  # (d, big)
+                G = beta_g * G + (1 - beta_g) * (gm @ gm.T) / gm.shape[1]
+                key = jax.tree_util.keystr(path)
+                if step % refresh_every == 1 or key not in cache:
+                    L_np = banded_ichol(np.asarray(jax.device_get(G)), band)
+                    solve, *_ = make_banded_solvers(L_np)
+                    cache[key] = jax.jit(jax.vmap(solve, in_axes=1, out_axes=1))
+                mm = m if p.shape[0] <= p.shape[1] else m.T
+                um = cache[key](mm)
+                u = um if p.shape[0] <= p.shape[1] else um.T
+                # trust-region: rescale to momentum norm
+                u = u * (jnp.linalg.norm(m) / jnp.maximum(jnp.linalg.norm(u), 1e-12))
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr_t * u).astype(p.dtype))
+            new_m.append(m)
+            new_G.append(G)
+
+        unflat = jax.tree_util.tree_unflatten
+        return (
+            unflat(treedef, new_p),
+            {"m": unflat(treedef, new_m), "G": unflat(treedef, new_G),
+             "step": jnp.asarray(step, jnp.int32)},
+        )
+
+    return Optimizer(init, update, "tripre")

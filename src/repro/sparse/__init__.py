@@ -1,0 +1,17 @@
+from .generate import (
+    banded_lower,
+    chain_matrix,
+    ic0_factor,
+    lung2_like,
+    poisson2d,
+    random_lower,
+)
+
+__all__ = [
+    "banded_lower",
+    "chain_matrix",
+    "ic0_factor",
+    "lung2_like",
+    "poisson2d",
+    "random_lower",
+]

@@ -1,0 +1,106 @@
+"""Train / eval steps.
+
+``make_train_step`` builds the jittable step:
+  * next-token cross-entropy with label masking (-1) + z-loss + MoE aux
+  * optional microbatch gradient accumulation (``lax.scan`` over chunks —
+    the DP all-reduce stays off the critical path until the last chunk
+    because XLA sees one summed gradient)
+  * global-norm clipping, then the optimizer update (state mirrors params,
+    so FSDP specs apply unchanged)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import DistContext, Model
+from ..optim.optimizers import Optimizer, clip_by_global_norm
+
+__all__ = ["loss_fn", "make_train_step", "make_eval_step"]
+
+
+def loss_fn(model: Model, params, batch, *, dist: Optional[DistContext] = None,
+            z_loss: float = 1e-4, aux_weight: float = 1e-2):
+    logits, aux = model.forward(params, batch, dist=dist)
+    labels = batch["labels"]
+    mask = labels >= 0
+    lab = jnp.where(mask, labels, 0)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    ntok = jnp.maximum(mask.sum(), 1)
+    ce = nll.sum() / ntok
+    zl = z_loss * ((lse * mask) ** 2).sum() / ntok
+    total = ce + zl + aux_weight * aux
+    return total, {"loss": total, "ce": ce, "z_loss": zl, "aux": aux,
+                   "ntok": ntok}
+
+
+def _split_batch(batch, micro_steps: int):
+    def sp(x):
+        B = x.shape[0]
+        assert B % micro_steps == 0, (B, micro_steps)
+        return x.reshape((micro_steps, B // micro_steps) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *,
+                    dist: Optional[DistContext] = None,
+                    micro_steps: int = 1, clip_norm: float = 1.0,
+                    cast_params: bool = True):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cast_params``: cast f32 master weights to the model compute dtype
+    *before* the forward pass, so FSDP weight all-gathers (and the matching
+    gradient reductions) travel in bf16, not f32 — §Perf iteration 2
+    (measured 2x on weight-collective wire bytes).  Masters stay f32; the
+    bf16 cast's VJP accumulates the gradient back to f32.
+    """
+    import os
+    if os.environ.get("REPRO_DISABLE_PERF_OPTS"):
+        cast_params = False
+    comp_dtype = model.dtype
+
+    def _cast(p):
+        if cast_params and p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(comp_dtype)
+        return p
+
+    def grads_of(params, batch):
+        def lf(p):
+            return loss_fn(model, jax.tree.map(_cast, p), batch, dist=dist)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if micro_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = _split_batch(batch, micro_steps)
+
+            def body(acc, mb):
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / micro_steps, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(model: Model, *, dist: Optional[DistContext] = None):
+    def step(params, batch):
+        _, metrics = loss_fn(model, params, batch, dist=dist)
+        return metrics
+    return step

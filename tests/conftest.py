@@ -1,0 +1,9 @@
+"""Test session config.
+
+8 virtual CPU devices so distributed/pipeline tests can build small meshes.
+(Deliberately NOT 512 — the production-mesh device count is set only inside
+launch/dryrun.py, which owns its own process.)
+"""
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)

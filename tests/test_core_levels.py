@@ -1,0 +1,65 @@
+"""Level-set construction invariants (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_level_sets, compute_levels
+from repro.sparse import banded_lower, chain_matrix, lung2_like, random_lower
+
+
+@st.composite
+def small_lower(draw):
+    n = draw(st.integers(5, 120))
+    seed = draw(st.integers(0, 2**31 - 1))
+    avg = draw(st.floats(0.5, 6.0))
+    return random_lower(n, avg_offdiag=avg, seed=seed)
+
+
+@given(small_lower())
+@settings(max_examples=30, deadline=None)
+def test_levels_partition_rows(L):
+    ls = build_level_sets(L)
+    all_rows = np.concatenate(ls.rows) if ls.rows else np.array([])
+    assert sorted(all_rows.tolist()) == list(range(L.n))
+    assert int(ls.counts.sum()) == L.n
+
+
+@given(small_lower())
+@settings(max_examples=30, deadline=None)
+def test_dependencies_strictly_lower_level(L):
+    level = compute_levels(L)
+    for i in range(L.n):
+        cols, _ = L.row(i)
+        for j in cols[:-1]:
+            assert level[j] < level[i]
+
+
+@given(small_lower())
+@settings(max_examples=30, deadline=None)
+def test_level_zero_rows_have_no_deps(L):
+    ls = build_level_sets(L)
+    for r in ls.rows[0]:
+        cols, _ = L.row(int(r))
+        assert cols.size == 1  # diagonal only
+
+
+def test_chain_has_n_levels():
+    L = chain_matrix(64)
+    assert build_level_sets(L).num_levels == 64
+
+
+def test_banded_levels_bounded():
+    L = banded_lower(256, bandwidth=4, fill=1.0, seed=0)
+    ls = build_level_sets(L)
+    assert 1 < ls.num_levels <= 256
+
+
+def test_lung2_like_matches_paper_regime():
+    """The structural twin must reproduce lung2's published shape: ~478
+    levels, 94% thin (<=2 rows), ~4-5 nnz/row, ~110k rows."""
+    L = lung2_like(scale=1.0)
+    ls = build_level_sets(L)
+    assert 450 <= ls.num_levels <= 550
+    assert ls.thin_fraction(2) > 0.90
+    assert 100_000 <= L.n <= 120_000
+    assert 3.0 <= L.nnz / L.n <= 5.5

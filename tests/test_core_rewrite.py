@@ -1,0 +1,116 @@
+"""Equation-rewriting invariants: the transformation must preserve the
+solution exactly, keep L' lower-triangular, never increase level count, and
+respect the fill budget."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RewriteConfig, build_level_sets, rewrite_matrix
+from repro.sparse import chain_matrix, lung2_like, random_lower
+
+
+def np_fsolve(L, b):
+    x = np.zeros(L.n)
+    for i in range(L.n):
+        c, v = L.row(i)
+        x[i] = (b[i] - (v[:-1] * x[c[:-1]]).sum()) / v[-1]
+    return x
+
+
+@st.composite
+def matrix_and_config(draw):
+    n = draw(st.integers(10, 150))
+    seed = draw(st.integers(0, 2**31 - 1))
+    avg = draw(st.floats(1.0, 5.0))
+    thin = draw(st.integers(1, 8))
+    orig = draw(st.booleans())
+    L = random_lower(n, avg_offdiag=avg, seed=seed)
+    cfg = RewriteConfig(thin_threshold=thin, use_original_rows=orig)
+    return L, cfg, seed
+
+
+@given(matrix_and_config())
+@settings(max_examples=25, deadline=None)
+def test_solution_invariance(args):
+    L, cfg, seed = args
+    res = rewrite_matrix(L, config=cfg)
+    b = np.random.default_rng(seed).normal(size=L.n)
+    x0 = np_fsolve(L, b)
+    x1 = np_fsolve(res.L, res.E.matvec(b))
+    np.testing.assert_allclose(x1, x0, rtol=1e-8, atol=1e-10)
+
+
+@given(matrix_and_config())
+@settings(max_examples=25, deadline=None)
+def test_structure_preserved(args):
+    L, cfg, _ = args
+    res = rewrite_matrix(L, config=cfg)
+    assert res.L.is_lower_triangular()
+    assert res.E.is_lower_triangular()
+    # E is unit lower triangular
+    np.testing.assert_allclose(res.E.diagonal(), 1.0)
+    # diagonal of L is untouched by eliminations
+    np.testing.assert_allclose(res.L.diagonal(), L.diagonal())
+    assert res.stats.levels_after <= res.stats.levels_before
+
+
+@given(matrix_and_config())
+@settings(max_examples=15, deadline=None)
+def test_fill_budget_respected(args):
+    L, cfg, _ = args
+    res = rewrite_matrix(L, config=cfg)
+    # budget is checked before each elimination, so overshoot is bounded by
+    # the size of the single elimination in flight
+    assert res.L.nnz <= cfg.max_fill_ratio * L.nnz + 2 * cfg.max_row_nnz
+
+
+def test_equivalence_as_matrices():
+    """L' x = E b must hold simultaneously with L x = b: E L = L' (as
+    operators on the solution), i.e. E @ L == L' densely."""
+    L = random_lower(60, avg_offdiag=3.0, seed=7)
+    res = rewrite_matrix(L, config=RewriteConfig(thin_threshold=4))
+    np.testing.assert_allclose(
+        res.E.to_dense() @ L.to_dense(), res.L.to_dense(), rtol=1e-9, atol=1e-11
+    )
+
+
+def test_chain_collapses_to_two_levels():
+    L = chain_matrix(32)
+    res = rewrite_matrix(L, config=RewriteConfig(thin_threshold=1, max_fill_ratio=100.0))
+    assert res.levels.num_levels == 2  # level 0 (row 0) + everything else
+
+
+def test_original_rows_mode_matches_paper_figure2():
+    """Paper Fig. 2: row 3 depends on row 1 which depends on row 0; two
+    rewritings with ORIGINAL equations lift row 3 to level 1 (dep on row 0
+    only via b-updates)."""
+    from repro.core import from_dense
+
+    Ld = np.array(
+        [
+            [1.0, 0, 0, 0],
+            [0.5, 2.0, 0, 0],
+            [0.0, 0.0, 1.0, 0],
+            [0.0, 0.7, 0.0, 3.0],
+        ]
+    )
+    L = from_dense(Ld)
+    res = rewrite_matrix(
+        L, config=RewriteConfig(thin_threshold=1, use_original_rows=True)
+    )
+    b = np.array([1.0, 2.0, 3.0, 4.0])
+    x0 = np.linalg.solve(Ld, b)
+    x1 = np.linalg.solve(res.L.to_dense(), res.E.matvec(b))
+    np.testing.assert_allclose(x1, x0, rtol=1e-12)
+    # row 3's dependency chain is broken: it no longer depends on row 1
+    cols, _ = res.L.row(3)
+    assert 1 not in cols.tolist()
+
+
+def test_lung2_like_rewrite_matches_paper_claims():
+    """Paper §V: 478 -> 66 levels (−86% barriers) at +10% FLOPs on lung2.
+    The structural twin must land in the same regime: >80% barrier removal
+    at <15% FLOP increase."""
+    L = lung2_like(scale=0.25)
+    res = rewrite_matrix(L, config=RewriteConfig(thin_threshold=2, max_row_nnz=256))
+    assert res.stats.level_reduction > 0.80, res.stats.summary()
+    assert res.stats.flop_increase < 0.15, res.stats.summary()

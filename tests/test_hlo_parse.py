@@ -1,0 +1,81 @@
+"""The trip-count-aware HLO cost parser must be exact on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_parse import parse_module
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_flat_scan_flops_exact():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    mc = parse_module(_compile(f, x, w).as_text(), 1)
+    assert mc.dot_flops == 7 * 2 * 8 * 16 * 16
+    assert len(mc.while_info) == 1 and mc.while_info[0][2] == 7
+
+
+def test_nested_scan_flops_exact():
+    def g(x, w):
+        def inner(c, _):
+            return jnp.tanh(c @ w), ()
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, ()
+        c, _ = jax.lax.scan(outer, x, None, length=3)
+        return c
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    mc = parse_module(_compile(g, x, w).as_text(), 1)
+    assert mc.dot_flops == 15 * 2 * 8 * 16 * 16
+    trips = sorted(t for _, _, t in mc.while_info)
+    assert trips == [3, 5]
+
+
+def test_unrolled_matches_scanned():
+    w_ = np.random.default_rng(0).normal(size=(16, 16)).astype(np.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        return jax.lax.scan(body, x, None, length=6)[0]
+
+    def unrolled(x, w):
+        for _ in range(6):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    a = parse_module(_compile(scanned, x, w).as_text(), 1)
+    b = parse_module(_compile(unrolled, x, w).as_text(), 1)
+    assert a.dot_flops == b.dot_flops
+
+
+def test_collective_ring_model():
+    from repro.launch.mesh import make_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_mesh((8,), ("data",))
+
+    def f(x):
+        return jnp.sum(x, axis=0)   # contract the sharded dim -> all-reduce
+
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32,
+                             sharding=NamedSharding(mesh, P("data", None)))
+    with mesh:
+        comp = jax.jit(f, out_shardings=NamedSharding(mesh, P(None))).lower(x).compile()
+    mc = parse_module(comp.as_text(), 8)
+    # one all-reduce of a (128,) f32: wire = 2*(7/8)*512 bytes
+    assert mc.collective.get("all-reduce", 0) == pytest.approx(2 * 7 / 8 * 512)
