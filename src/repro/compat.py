@@ -1,0 +1,45 @@
+"""Version compatibility shims for the range of JAX builds we run on.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+top level, and its ``check_rep`` kwarg was renamed ``check_vma`` along the
+way.  All repro code imports it from here and uses the *new* spelling;
+this shim adapts downward for older builds.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # new API (jax >= 0.6): top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_vma"
+except ImportError:  # older builds: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_rep"
+
+try:  # jax.enable_x64 context manager is jax.experimental.enable_x64 on old builds
+    import jax as _jax
+
+    enable_x64 = _jax.enable_x64
+except AttributeError:
+    from jax.experimental import enable_x64
+
+try:  # pltpu.CompilerParams was TPUCompilerParams on older builds
+    from jax.experimental.pallas import tpu as _pltpu
+
+    CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+except ImportError:  # pragma: no cover - pallas always present in this image
+    CompilerParams = None
+
+__all__ = ["shard_map", "CompilerParams", "enable_x64"]
+
+
+@functools.wraps(_shard_map)
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    if check_vma is not None:
+        kw[_CHECK_KWARG] = check_vma
+    if f is None:  # support partial application, mirroring jax.shard_map
+        return lambda g: _shard_map(
+            g, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
-from .codegen import Schedule, LevelSlab
+from .codegen import Schedule, LevelSlab, _gather_sum
 
 __all__ = ["DistributedSchedule", "shard_schedule", "make_distributed_solver"]
 
@@ -49,12 +49,15 @@ class DistributedSchedule:
     def num_levels(self) -> int:
         return len(self.rows)
 
-    def collective_bytes(self, itemsize: int = 4, strategy: str = "all_gather") -> int:
+    def collective_bytes(self, itemsize: int = 4, strategy: str = "all_gather",
+                         batch: int = 1) -> int:
         """Predicted on-wire bytes per solve (per device, ring all-gather):
-        the §Roofline collective term for the distributed solver."""
+        the §Roofline collective term for the distributed solver.  A batched
+        solve multiplies the payload by ``batch`` but keeps the collective
+        *count* fixed — latency-bound thin levels amortize over columns."""
         if strategy == "psum":
-            return self.num_levels * 2 * (self.n + 1) * itemsize
-        return sum(r.size * itemsize for r in self.rows)
+            return self.num_levels * 2 * (self.n + 1) * batch * itemsize
+        return sum(r.size * batch * itemsize for r in self.rows)
 
 
 def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
@@ -89,6 +92,12 @@ def make_distributed_solver(
 
     x is replicated (n+1, scratch slot last); per level each device solves an
     R/ndev shard of rows and the solved values are exchanged.
+
+    ``b`` may be ``(n,)`` or batched ``(n, m)``: the batch axis rides through
+    the shard_map region unsharded (columns are independent systems), so the
+    per-level collective moves ``R * m`` values instead of ``R`` — the
+    collective *count* (the paper's barrier analogue) is unchanged while the
+    per-solve payload amortizes over the batch.
     """
     assert strategy in ("all_gather", "psum")
     n = dsched.n
@@ -109,17 +118,22 @@ def make_distributed_solver(
 
     def _solve(b, cols, vals, diag, rows):
         dt = b.dtype
-        bx = jnp.concatenate([b, jnp.zeros((1,), dt)])  # scratch slot
-        x = jnp.zeros((n + 1,), dt)
+        batched = b.ndim == 2
+        bx = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])  # scratch
+        x = jnp.zeros((n + 1,) + b.shape[1:], dt)
         for lv in range(len(cols)):
-            s = jnp.sum(vals[lv].astype(dt) * x[cols[lv]], axis=0)  # (R/ndev,)
-            xl = (bx[rows[lv]] - s) / diag[lv].astype(dt)
+            v = vals[lv].astype(dt)
+            d = diag[lv].astype(dt)
+            if batched:
+                d = d[:, None]
+            s = _gather_sum(v, cols[lv], x)             # (R/ndev[, m])
+            xl = (bx[rows[lv]] - s) / d
             if strategy == "all_gather":
-                xg = jax.lax.all_gather(xl, axis, tiled=True)        # (R,)
+                xg = jax.lax.all_gather(xl, axis, tiled=True)        # (R[, m])
                 rg = jax.lax.all_gather(rows[lv], axis, tiled=True)  # (R,)
                 x = x.at[rg].set(xg)
             else:  # psum: full-vector exchange — the naive barrier port
-                contrib = jnp.zeros((n + 1,), dt).at[rows[lv]].set(xl)
+                contrib = jnp.zeros_like(x).at[rows[lv]].set(xl)
                 x = x + jax.lax.psum(contrib, axis)
             x = x.at[n].set(0.0)  # clear pad-row scratch writes
         return x[:n]

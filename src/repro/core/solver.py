@@ -2,6 +2,26 @@
 
     solver = SpTRSV.build(L, strategy="levelset", rewrite=RewriteConfig())
     x = solver.solve(b)          # jit-compiled, matrix-specialized
+    X = solver.solve(B)          # B: (n, m) — m systems in one pass
+
+Every strategy solves one RHS ``b: (n,)`` or a multi-RHS batch
+``B: (n, m)`` (m independent systems sharing L).  Batching amortizes the
+per-level launch/synchronization cost over columns and widens the TPU lane
+dimension from R to R*m, which is where thin levels (the paper's lung2
+pathology) leave throughput on the table.
+
+Strategy × capability matrix
+----------------------------
+=================  ==========  =========  =========  ============
+strategy           single RHS  batched    rewrite    distributed
+=================  ==========  =========  =========  ============
+serial             yes         yes        yes        no
+levelset           yes         yes        yes        no
+levelset_unroll    yes         yes        yes        no
+pallas_level       yes         yes        yes        no
+pallas_fused       yes         yes        yes        no
+distributed        yes         yes        yes        yes (mesh axis)
+=================  ==========  =========  =========  ============
 
 Strategies
 ----------
@@ -11,7 +31,14 @@ Strategies
 ``pallas_level``   per-level Pallas TPU kernel (kernels/sptrsv_level)
 ``pallas_fused``   whole solve in one Pallas kernel, x in VMEM (beyond-paper)
 ``distributed``    shard_map level solve over a mesh axis (one collective
-                   per level — rewriting reduces collective count)
+                   per level — rewriting reduces collective count; a batch
+                   multiplies collective payload, not count)
+
+Batched quickstart (PCG with many right-hand sides)::
+
+    from repro.core.pcg import make_ic_preconditioner_batched, pcg_batched
+    M_inv = make_ic_preconditioner_batched(Lfactor, strategy="levelset")
+    res = pcg_batched(A, B, M_inv)     # B: (n, m); res.x: (n, m)
 """
 from __future__ import annotations
 
@@ -117,12 +144,15 @@ class SpTRSV:
             raise ValueError(strategy)
 
         if rhs_fn is not None:
-            base_fn = fn
-
-            def fn(b):  # noqa: F811 — compose RHS transform with the solve
-                return base_fn(rhs_fn(b))
-
-        solve_fn = jax.jit(fn) if jit else fn
+            # Compose b' = E b with the solve as two separate XLA programs.
+            # A single jit over both lets XLA fuse the batched SpMV into the
+            # per-level consumers and recompute it, a >10x slowdown at m=64
+            # on CPU; the extra dispatch costs microseconds.
+            base_c = jax.jit(fn) if jit else fn
+            rhs_c = jax.jit(rhs_fn) if jit else rhs_fn
+            solve_fn = lambda b, _r=rhs_c, _s=base_c: _s(_r(b))  # noqa: E731
+        else:
+            solve_fn = jax.jit(fn) if jit else fn
         return SpTRSV(
             n=L.n,
             strategy=strategy,
@@ -134,7 +164,24 @@ class SpTRSV:
         )
 
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Solve L x = b.  ``b`` may be ``(n,)`` (one system) or ``(n, m)``
+        (m independent systems solved in one batched pass).  Each distinct
+        batch width compiles once (shapes are trace-time constants — the
+        executor is matrix- *and* batch-specialized)."""
+        if b.ndim not in (1, 2) or b.shape[0] != self.n:
+            raise ValueError(
+                f"b must be ({self.n},) or ({self.n}, m); got {b.shape}")
         return self._solve_fn(b)
+
+    def solve_batched(self, B: jnp.ndarray) -> jnp.ndarray:
+        """Explicitly-batched alias: ``B: (n, m)`` → ``X: (n, m)``.
+
+        ``solve`` already dispatches on ndim; this entry point exists so
+        call sites that *require* the multi-RHS path fail loudly when handed
+        a single vector."""
+        if B.ndim != 2:
+            raise ValueError(f"solve_batched expects (n, m); got {B.shape}")
+        return self.solve(B)
 
     @property
     def stats(self):

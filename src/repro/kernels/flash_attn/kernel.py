@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["flash_fwd"]
 
 NEG_INF = -1e30
@@ -122,7 +124,7 @@ def flash_fwd(
             pltpu.VMEM((block_q,), jnp.float32),      # m
             pltpu.VMEM((block_q,), jnp.float32),      # l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY),
         ),

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["spmv_kernel", "spmv"]
 
 
@@ -50,7 +52,7 @@ def spmv(
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), v_pad.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=(pltpu.PARALLEL,),
         ),
         interpret=interpret,

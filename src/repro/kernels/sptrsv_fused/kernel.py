@@ -28,7 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_kernel", "fused_solve"]
+from repro import compat
+
+__all__ = ["fused_kernel", "fused_solve", "fused_kernel_batched",
+           "fused_solve_batched"]
 
 
 def fused_kernel(bl_ref, cols_ref, vals_ref, diag_ref, out_ref, x_scr):
@@ -81,9 +84,70 @@ def fused_solve(
         out_specs=pl.BlockSpec((n_pad,), lambda c: (0,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), bl_perm.dtype),
         scratch_shapes=[pltpu.VMEM((n_pad,), bl_perm.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY,),  # sequential grid = dep order
         ),
         interpret=interpret,
         name="sptrsv_fused",
+    )(bl_perm, cols, vals, diag)
+
+
+def fused_kernel_batched(bl_ref, cols_ref, vals_ref, diag_ref, out_ref, x_scr):
+    """Multi-RHS grid step: one chunk of C rows × all m columns.
+
+    bl: (C, m), cols/vals: (K, C), diag: (C,); out/x_scr: (n_pad, m).
+    Same contiguous-store layout trick as the single-RHS kernel — the chunk
+    writes rows [c*C, (c+1)*C) of the permuted solution, now as a (C, m)
+    block whose minor (lane) dimension is the batch."""
+    c = pl.program_id(0)
+    C = bl_ref.shape[0]
+
+    @pl.when(c == 0)
+    def _init():
+        x_scr[...] = jnp.zeros_like(x_scr)
+
+    x = x_scr[...]                      # (n_pad, m)
+    acc = bl_ref[...]                   # (C, m)
+    K = cols_ref.shape[0]
+    for k in range(K):  # unrolled; K static (matrix-specialized program)
+        dep = jnp.take(x, cols_ref[k, :], axis=0, mode="clip")  # (C, m)
+        acc = acc - vals_ref[k, :][:, None] * dep
+    xl = acc / diag_ref[...][:, None]
+    # contiguous dynamic-offset store along rows — no scatter needed
+    pl.store(x_scr, (pl.dslice(c * C, C), slice(None)), xl)
+    pl.store(out_ref, (pl.dslice(c * C, C), slice(None)), xl)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def fused_solve_batched(
+    bl_perm: jnp.ndarray,   # (n_pad, m) b in level-order positions
+    cols: jnp.ndarray,      # (K, n_pad) deps remapped to positions
+    vals: jnp.ndarray,      # (K, n_pad)
+    diag: jnp.ndarray,      # (n_pad,)
+    *,
+    chunk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    K, n_pad = cols.shape
+    m = bl_perm.shape[1]
+    assert n_pad % chunk == 0
+    grid = (n_pad // chunk,)
+    return pl.pallas_call(
+        fused_kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, m), lambda c: (c, 0)),  # bl
+            pl.BlockSpec((K, chunk), lambda c: (0, c)),  # cols
+            pl.BlockSpec((K, chunk), lambda c: (0, c)),  # vals
+            pl.BlockSpec((chunk,), lambda c: (c,)),      # diag
+        ],
+        # full-length output; each step stores its chunk of rows
+        out_specs=pl.BlockSpec((n_pad, m), lambda c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, m), bl_perm.dtype),
+        scratch_shapes=[pltpu.VMEM((n_pad, m), bl_perm.dtype)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY,),  # sequential grid = dep order
+        ),
+        interpret=interpret,
+        name="sptrsv_fused_batched",
     )(bl_perm, cols, vals, diag)

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core.codegen import Schedule
 
-from .kernel import fused_solve
+from .kernel import fused_solve, fused_solve_batched
 
 __all__ = ["FusedLayout", "build_layout", "make_solver"]
 
@@ -58,9 +58,10 @@ def build_layout(schedule: Schedule, chunk: int = 512) -> FusedLayout:
         pos[slab.rows] = np.arange(o, o + slab.R)
     pos[n] = n_pad - 1  # scratch row maps to the last pad position
 
+    val_dtype = schedule.slabs[0].vals.dtype
     cols = np.zeros((K, n_pad), dtype=np.int32)
-    vals = np.zeros((K, n_pad), dtype=np.float32)
-    diag = np.ones((n_pad,), dtype=np.float32)
+    vals = np.zeros((K, n_pad), dtype=val_dtype)
+    diag = np.ones((n_pad,), dtype=val_dtype)
     for (o, _), slab in zip(spans, schedule.slabs):
         k = slab.K
         # remap dependency columns (original row ids) to positions
@@ -84,10 +85,12 @@ def make_solver(
     diag = jnp.asarray(lay.diag)
 
     def solve(b: jnp.ndarray) -> jnp.ndarray:
+        """b: (n,) or (n, m) — one fused kernel either way."""
         dt = b.dtype
-        b_ext = jnp.concatenate([b, jnp.zeros((1,), dt)])
+        kern = fused_solve_batched if b.ndim == 2 else fused_solve
+        b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
         bl_perm = b_ext[perm_rows]  # pad rows -> b_ext[n] = 0
-        xp = fused_solve(
+        xp = kern(
             bl_perm, cols, vals.astype(dt), diag.astype(dt),
             chunk=lay.chunk, interpret=interpret,
         )

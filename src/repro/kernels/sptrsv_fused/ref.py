@@ -8,10 +8,14 @@ __all__ = ["fused_solve_ref"]
 
 
 def fused_solve_ref(bl_perm, cols, vals, diag, *, chunk: int = 512):
+    """Single- or multi-RHS (bl_perm (n_pad,) or (n_pad, m)) oracle."""
     K, n_pad = cols.shape
-    x = jnp.zeros((n_pad,), bl_perm.dtype)
+    batched = bl_perm.ndim == 2
+    x = jnp.zeros(bl_perm.shape, bl_perm.dtype)
     for c in range(n_pad // chunk):
         sl = slice(c * chunk, (c + 1) * chunk)
-        s = jnp.sum(vals[:, sl] * x[cols[:, sl]], axis=0)
-        x = x.at[sl].set((bl_perm[sl] - s) / diag[sl])
+        v = vals[:, sl, None] if batched else vals[:, sl]
+        d = diag[sl, None] if batched else diag[sl]
+        s = jnp.sum(v * x[cols[:, sl]], axis=0)
+        x = x.at[sl].set((bl_perm[sl] - s) / d)
     return x

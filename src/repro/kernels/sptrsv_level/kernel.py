@@ -27,7 +27,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["level_kernel", "level_solve_blocks"]
+from repro import compat
+
+__all__ = [
+    "level_kernel",
+    "level_solve_blocks",
+    "level_kernel_batched",
+    "level_solve_blocks_batched",
+]
 
 
 def level_kernel(x_ref, bl_ref, cols_ref, vals_ref, diag_ref, out_ref):
@@ -38,6 +45,21 @@ def level_kernel(x_ref, bl_ref, cols_ref, vals_ref, diag_ref, out_ref):
     for k in range(K):  # unrolled: K is static per level
         acc = acc - vals_ref[k, :] * jnp.take(x, cols_ref[k, :], mode="clip")
     out_ref[...] = acc / diag_ref[...]
+
+
+def level_kernel_batched(x_ref, bl_ref, cols_ref, vals_ref, diag_ref, out_ref):
+    """Multi-RHS variant: x_ref (n_pad, m), bl/out (BR, m), cols/vals (K, BR).
+
+    The row gather pulls whole (m,) solution rows, so the innermost (lane)
+    dimension is the batch — thin levels stop underfeeding the vector unit
+    once m reaches the lane width."""
+    x = x_ref[...]                       # (n_pad, m)
+    acc = bl_ref[...]                    # (BR, m)
+    K = cols_ref.shape[0]
+    for k in range(K):  # unrolled: K is static per level
+        dep = jnp.take(x, cols_ref[k, :], axis=0, mode="clip")  # (BR, m)
+        acc = acc - vals_ref[k, :][:, None] * dep
+    out_ref[...] = acc / diag_ref[...][:, None]
 
 
 @functools.partial(
@@ -70,9 +92,47 @@ def level_solve_blocks(
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((R,), x_pad.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=(pltpu.PARALLEL,),  # blocks of a level are independent
         ),
         interpret=interpret,
         name="sptrsv_level",
+    )(x_pad, bl, cols, vals, diag)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret")
+)
+def level_solve_blocks_batched(
+    x_pad: jnp.ndarray,    # (n_pad, m) current solution incl. scratch row
+    bl: jnp.ndarray,       # (R_pad, m) b gathered at the level's rows
+    cols: jnp.ndarray,     # (K, R_pad) int32
+    vals: jnp.ndarray,     # (K, R_pad)
+    diag: jnp.ndarray,     # (R_pad,)
+    *,
+    block_rows: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Solve one level for m RHS columns at once; returns xl (R_pad, m)."""
+    K, R = cols.shape
+    assert R % block_rows == 0, (R, block_rows)
+    n_pad, m = x_pad.shape
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        level_kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad, m), lambda i: (0, 0)),            # x: full
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),       # bl
+            pl.BlockSpec((K, block_rows), lambda i: (0, i)),       # cols
+            pl.BlockSpec((K, block_rows), lambda i: (0, i)),       # vals
+            pl.BlockSpec((block_rows,), lambda i: (i,)),           # diag
+        ],
+        out_specs=pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, m), x_pad.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL,),  # blocks of a level are independent
+        ),
+        interpret=interpret,
+        name="sptrsv_level_batched",
     )(x_pad, bl, cols, vals, diag)

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core.codegen import Schedule
 
-from .kernel import level_solve_blocks
+from .kernel import level_solve_blocks, level_solve_blocks_batched
 
 __all__ = ["make_solver"]
 
@@ -32,9 +32,11 @@ def make_solver(
         rows[: slab.R] = slab.rows
         cols = np.zeros((slab.K, R_pad), np.int32)
         cols[:, : slab.R] = slab.cols
-        vals = np.zeros((slab.K, R_pad), np.float32)
+        # keep the matrix dtype — hard-coding f32 here would silently
+        # truncate f64 factors at pack time
+        vals = np.zeros((slab.K, R_pad), slab.vals.dtype)
         vals[:, : slab.R] = slab.vals
-        diag = np.ones((R_pad,), np.float32)
+        diag = np.ones((R_pad,), slab.diag.dtype)
         diag[: slab.R] = slab.diag
         packed.append(
             (
@@ -47,12 +49,14 @@ def make_solver(
         )
 
     def solve(b: jnp.ndarray) -> jnp.ndarray:
+        """b: (n,) or (n, m) — batched RHS solve all columns in one pass."""
         dt = b.dtype
-        b_ext = jnp.concatenate([b, jnp.zeros((1,), dt)])
-        x = jnp.zeros((n_pad,), dt)
+        kern = level_solve_blocks_batched if b.ndim == 2 else level_solve_blocks
+        b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
+        x = jnp.zeros((n_pad,) + b.shape[1:], dt)
         for rows, cols, vals, diag, br in packed:
             bl = b_ext[jnp.minimum(rows, n)]
-            xl = level_solve_blocks(
+            xl = kern(
                 x, bl, cols, vals.astype(dt), diag.astype(dt),
                 block_rows=br, interpret=interpret,
             )

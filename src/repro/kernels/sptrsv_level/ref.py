@@ -7,6 +7,12 @@ __all__ = ["level_solve_ref"]
 
 
 def level_solve_ref(x_pad, bl, cols, vals, diag):
-    """xl[r] = (bl[r] - sum_k vals[k,r] * x[cols[k,r]]) / diag[r]"""
+    """xl[r] = (bl[r] - sum_k vals[k,r] * x[cols[k,r]]) / diag[r]
+
+    Handles both single-RHS (x_pad (n_pad,)) and batched (x_pad (n_pad, m))
+    layouts, mirroring the kernel pair."""
+    if x_pad.ndim == 2:
+        s = jnp.sum(vals[..., None] * x_pad[cols], axis=0)
+        return (bl - s) / diag[:, None]
     s = jnp.sum(vals * x_pad[cols], axis=0)
     return (bl - s) / diag

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["block_apply_kernel", "block_apply"]
 
 
@@ -54,7 +56,7 @@ def block_apply(
         ],
         out_specs=pl.BlockSpec((batch_block, T), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((NB, T), rhs.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=(pltpu.PARALLEL,),
         ),
         interpret=interpret,

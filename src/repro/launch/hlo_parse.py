@@ -37,7 +37,10 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
 _CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%[\w.\-]+)")
-_OPERAND_RE = re.compile(r"\((%[\w.\-][^)]*)\)")
+# Operand lists print as `op(%a, %b)` on new XLA and `op(f32[8]{0} %a, ...)`
+# (types included) on older builds — accept both by requiring a `%` anywhere
+# inside the parens rather than immediately after them.
+_OPERAND_RE = re.compile(r"\(([^)]*%[^)]*)\)")
 _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 

@@ -1,3 +1,3 @@
-from .engine import ServeEngine, Request
+from .engine import ServeEngine, Request, SolveEngine, SolveRequest
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "SolveEngine", "SolveRequest"]

@@ -1,4 +1,5 @@
-"""Serving engine: prefill/decode with continuous batching.
+"""Serving engines: LLM prefill/decode with continuous batching, and a
+micro-batching front-end for matrix-specialized SpTRSV solves.
 
 A fixed pool of ``B`` decode slots; finished sequences are replaced from the
 admission queue each step (continuous batching).  Per-slot state lives in
@@ -13,15 +14,16 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, List, Optional
+from typing import TYPE_CHECKING, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.model import Model
+if TYPE_CHECKING:  # SolveEngine must stay importable without the model stack
+    from ..models.model import Model
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "SolveRequest", "SolveEngine"]
 
 
 @dataclasses.dataclass
@@ -113,3 +115,84 @@ class ServeEngine:
     def run(self, max_steps: int = 1000):
         while self.step() and self.steps < max_steps:
             pass
+
+
+# ==========================================================================
+# Batched SpTRSV serving
+# ==========================================================================
+@dataclasses.dataclass
+class SolveRequest:
+    """One RHS vector to solve against the engine's fixed factor L."""
+
+    rid: int
+    b: np.ndarray                   # (n,)
+    x: Optional[np.ndarray] = None  # set when done
+    done: bool = False
+
+
+class SolveEngine:
+    """Micro-batching front-end for a matrix-specialized :class:`SpTRSV`.
+
+    The paper's economics — expensive per-matrix analysis amortized over many
+    solves of the same L — extend to serving: requests that share L are
+    drained from an admission queue and solved as one multi-RHS batch
+    ``L X = B``, so per-level launch overhead and the lane underfill of thin
+    levels amortize over the batch width.
+
+    Batch widths are rounded up to the next bucket (powers of ``bucket_base``
+    up to ``max_batch``, padding columns with zeros) so the jit cache stays
+    bounded: at most log(max_batch) compiled variants, not one per queue
+    depth.
+    """
+
+    def __init__(self, solver, *, max_batch: int = 64, bucket_base: int = 2):
+        assert max_batch >= 1
+        self.solver = solver
+        self.max_batch = max_batch
+        self.bucket_base = max(2, bucket_base)
+        self.queue: deque = deque()
+        self.solved = 0
+        self.batches = 0
+        self._next_rid = 0
+
+    def submit(self, b: np.ndarray) -> SolveRequest:
+        b = np.asarray(b)
+        assert b.ndim == 1 and b.shape[0] == self.solver.n, b.shape
+        req = SolveRequest(rid=self._next_rid, b=b)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _bucket(self, width: int) -> int:
+        """Smallest power-of-base bucket >= width, capped at max_batch."""
+        m = 1
+        while m < width:
+            m *= self.bucket_base
+        return min(m, self.max_batch)
+
+    def step(self) -> int:
+        """Drain up to ``max_batch`` queued requests as one batched solve.
+        Returns the number of requests completed (0 if the queue is empty)."""
+        if not self.queue:
+            return 0
+        take = min(len(self.queue), self.max_batch)
+        reqs = [self.queue.popleft() for _ in range(take)]
+        m = self._bucket(take)
+        dtype = np.result_type(*(r.b.dtype for r in reqs))
+        B = np.zeros((self.solver.n, m), dtype=dtype)
+        for j, r in enumerate(reqs):
+            B[:, j] = r.b
+        X = np.asarray(self.solver.solve_batched(jnp.asarray(B)))
+        for j, r in enumerate(reqs):
+            r.x = X[:, j]
+            r.done = True
+        self.solved += take
+        self.batches += 1
+        return take
+
+    def run(self) -> int:
+        """Solve everything queued; returns total completed."""
+        total = 0
+        while self.queue:
+            total += self.step()
+        return total

@@ -1,0 +1,88 @@
+"""Property-test harness: real hypothesis when installed, otherwise a
+minimal deterministic fallback implementing the subset this suite uses
+(``given``, ``settings``, ``st.integers/floats/booleans/sampled_from``,
+``st.composite``).
+
+The fallback draws examples from a seeded ``numpy`` Generator, so runs are
+reproducible and CI-stable (no shrinking — a failing example prints its
+draw seed instead).  Test modules import from here, never from
+``hypothesis`` directly.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example_from(self, rng):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw_fn(rng):
+                    return fn(lambda s: s.example_from(rng), *args, **kwargs)
+
+                return _Strategy(draw_fn)
+
+            return make
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_max_examples", 20)
+
+            # NB: no functools.wraps — pytest must see the zero-arg
+            # signature, not the wrapped one (whose params look like
+            # fixtures).
+            def wrapper():
+                for example in range(max_examples):
+                    rng = np.random.default_rng(0xC0FFEE + 7919 * example)
+                    drawn = [s.example_from(rng) for s in strategies]
+                    try:
+                        fn(*drawn)
+                    except Exception:
+                        print(f"[property fallback] failing example #{example}: "
+                              f"{drawn!r}")
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

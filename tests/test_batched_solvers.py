@@ -1,0 +1,177 @@
+"""Multi-RHS (batched) SpTRSV coverage: every strategy must solve
+``L X = B`` with ``B: (n, m)`` column-wise identically to m single-RHS
+solves, including edge cases (m=1, m>n, empty/padded slabs) and the serving
+and PCG entry points built on top."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RewriteConfig, SpTRSV, build_schedule
+from repro.core.codegen import _pack_rows, build_ell, ell_spmv, make_levelset_solver
+from repro.sparse import chain_matrix, lung2_like, random_lower
+
+from test_property_solvers import np_fsolve
+
+BATCH = 64  # acceptance-criterion batch width
+
+
+def _solve_columns(s, B):
+    return np.stack(
+        [np.asarray(s.solve(jnp.asarray(B[:, j]))) for j in range(B.shape[1])],
+        axis=1)
+
+
+LOCAL_STRATEGIES = ["serial", "levelset", "levelset_unroll",
+                    "pallas_level", "pallas_fused"]
+
+
+@pytest.mark.parametrize("strategy", LOCAL_STRATEGIES)
+@pytest.mark.parametrize("rewrite", [None, RewriteConfig(thin_threshold=3)])
+def test_batched_matches_columnwise(strategy, rewrite):
+    L = lung2_like(scale=0.02, fat_levels=4, thin_run=6, dtype=np.float32)
+    rng = np.random.default_rng(7)
+    B = rng.normal(size=(L.n, BATCH)).astype(np.float32)
+    s = SpTRSV.build(L, strategy=strategy, rewrite=rewrite)
+    X = np.asarray(s.solve_batched(jnp.asarray(B)))
+    assert X.shape == (L.n, BATCH)
+    np.testing.assert_allclose(X, _solve_columns(s, B), rtol=1e-5, atol=1e-5)
+    # and against the float64 oracle
+    X_ref = np_fsolve(L.astype(np.float64), B.astype(np.float64))
+    np.testing.assert_allclose(X, X_ref, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("dist_strategy", ["all_gather", "psum"])
+@pytest.mark.parametrize("rewrite", [None, RewriteConfig(thin_threshold=4)])
+def test_batched_distributed(dist_strategy, rewrite):
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    L = random_lower(400, avg_offdiag=3.0, seed=4, dtype=np.float32)
+    rng = np.random.default_rng(2)
+    B = rng.normal(size=(400, BATCH)).astype(np.float32)
+    s = SpTRSV.build(L, strategy="distributed", mesh=mesh,
+                     dist_strategy=dist_strategy, rewrite=rewrite)
+    X = np.asarray(s.solve_batched(jnp.asarray(B)))
+    np.testing.assert_allclose(X, _solve_columns(s, B), rtol=1e-5, atol=1e-5)
+    X_ref = np_fsolve(L.astype(np.float64), B.astype(np.float64))
+    np.testing.assert_allclose(X, X_ref, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("strategy", LOCAL_STRATEGIES)
+def test_batch_width_one(strategy):
+    """(n, 1) must equal the (n,) solve with a trailing axis."""
+    L = random_lower(120, avg_offdiag=2.5, seed=3, dtype=np.float32)
+    b = np.random.default_rng(0).normal(size=L.n).astype(np.float32)
+    s = SpTRSV.build(L, strategy=strategy)
+    x1 = np.asarray(s.solve(jnp.asarray(b)))
+    X = np.asarray(s.solve_batched(jnp.asarray(b[:, None])))
+    assert X.shape == (L.n, 1)
+    np.testing.assert_allclose(X[:, 0], x1, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", LOCAL_STRATEGIES)
+def test_batch_wider_than_n(strategy):
+    """m > n: a 40-row system with a 64-wide batch."""
+    L = random_lower(40, avg_offdiag=2.0, seed=8, dtype=np.float32)
+    rng = np.random.default_rng(9)
+    B = rng.normal(size=(40, 64)).astype(np.float32)
+    s = SpTRSV.build(L, strategy=strategy)
+    X = np.asarray(s.solve_batched(jnp.asarray(B)))
+    X_ref = np_fsolve(L.astype(np.float64), B.astype(np.float64))
+    np.testing.assert_allclose(X, X_ref, rtol=2e-3, atol=2e-4)
+
+
+def test_solve_shape_validation():
+    L = random_lower(30, seed=0, dtype=np.float32)
+    s = SpTRSV.build(L, strategy="levelset")
+    with pytest.raises(ValueError):
+        s.solve(jnp.zeros((29,), jnp.float32))
+    with pytest.raises(ValueError):
+        s.solve(jnp.zeros((30, 2, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        s.solve_batched(jnp.zeros((30,), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# packing edge cases
+# --------------------------------------------------------------------------
+def test_pack_rows_empty_level():
+    """_pack_rows on an empty row set: K clamps to 1, R = 0, and the
+    resulting slab is a no-op for the executor."""
+    L = random_lower(20, seed=1, dtype=np.float32)
+    slab = _pack_rows(L, np.array([], dtype=np.int64), sort_by_nnz=True)
+    assert slab.R == 0 and slab.K == 1
+    assert slab.cols.shape == (1, 0) and slab.vals.shape == (1, 0)
+
+
+def test_bucket_pad_ratio_batched():
+    """bucket_pad_ratio > 1 splits ragged levels into multiple slabs; the
+    split schedule must still solve batched RHS exactly (K-padding paths)."""
+    L = lung2_like(scale=0.03, fat_levels=5, thin_run=5, dtype=np.float32)
+    sched = build_schedule(L, bucket_pad_ratio=1.5)
+    assert sched.num_levels > build_schedule(L).num_levels  # levels split
+    solve = make_levelset_solver(sched)
+    rng = np.random.default_rng(4)
+    B = rng.normal(size=(L.n, 9)).astype(np.float32)
+    X = np.asarray(solve(jnp.asarray(B)))
+    X_ref = np_fsolve(L.astype(np.float64), B.astype(np.float64))
+    np.testing.assert_allclose(X, X_ref, rtol=2e-3, atol=2e-4)
+    # padded-FLOP accounting must not shrink below the unsplit schedule's
+    # useful work
+    assert sched.padded_flops() >= L.nnz
+
+
+def test_ell_spmv_batched():
+    """Batched ELL SpMV (the RHS transform B' = E B path) is column-wise
+    identical to single SpMVs."""
+    L = random_lower(80, avg_offdiag=4.0, seed=5, dtype=np.float32)
+    ell = build_ell(L)
+    rng = np.random.default_rng(6)
+    V = rng.normal(size=(80, 5)).astype(np.float32)
+    Y = np.asarray(ell_spmv(ell, jnp.asarray(V)))
+    for j in range(5):
+        yj = np.asarray(ell_spmv(ell, jnp.asarray(V[:, j])))
+        np.testing.assert_allclose(Y[:, j], yj, rtol=1e-6, atol=1e-6)
+    # oracle
+    np.testing.assert_allclose(Y, L.to_dense() @ V, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# batched workloads built on top: serving + PCG
+# --------------------------------------------------------------------------
+def test_solve_engine_micro_batching():
+    from repro.serve import SolveEngine
+
+    L = chain_matrix(90, dtype=np.float32)
+    s = SpTRSV.build(L, strategy="levelset", rewrite=RewriteConfig(thin_threshold=2))
+    eng = SolveEngine(s, max_batch=8)
+    rng = np.random.default_rng(11)
+    reqs = [eng.submit(rng.normal(size=L.n).astype(np.float32))
+            for _ in range(19)]
+    assert eng.run() == 19
+    assert eng.batches == 3  # 8 + 8 + 3 (bucketed to 4)
+    for r in reqs:
+        assert r.done
+        np.testing.assert_allclose(
+            r.x, np.asarray(s.solve(jnp.asarray(r.b))), rtol=1e-6, atol=1e-6)
+
+
+def test_pcg_batched_matches_single():
+    from repro.core.pcg import (make_ic_preconditioner_batched, pcg,
+                                pcg_batched)
+    from repro.sparse import ic0_factor, poisson2d
+
+    A = poisson2d(10, 10, dtype=np.float64).astype(np.float32)
+    Lf = ic0_factor(A)
+    M = make_ic_preconditioner_batched(Lf.astype(np.float32))
+    rng = np.random.default_rng(12)
+    B = rng.normal(size=(A.n, 4)).astype(np.float32)
+    res = pcg_batched(A, jnp.asarray(B), M, tol=1e-6, maxiter=200)
+    assert res.converged.all()
+    assert res.x.shape == B.shape
+    for j in range(B.shape[1]):
+        single = pcg(A, jnp.asarray(B[:, j]), M, tol=1e-6, maxiter=200)
+        assert single.converged
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(single.x),
+                                   rtol=1e-3, atol=1e-4)

@@ -1,7 +1,7 @@
 """Level-set construction invariants (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import build_level_sets, compute_levels
 from repro.sparse import banded_lower, chain_matrix, lung2_like, random_lower

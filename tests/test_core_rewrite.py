@@ -2,7 +2,7 @@
 solution exactly, keep L' lower-triangular, never increase level count, and
 respect the fill budget."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import RewriteConfig, build_level_sets, rewrite_matrix
 from repro.sparse import chain_matrix, lung2_like, random_lower

@@ -76,7 +76,9 @@ def test_rewrite_reduces_distributed_collectives():
 
 
 def test_float64_path():
-    with jax.enable_x64():
+    from repro.compat import enable_x64
+
+    with enable_x64():
         L = random_lower(150, avg_offdiag=3.0, seed=9, dtype=np.float64)
         b = np.random.default_rng(3).normal(size=150)
         x_ref = np_fsolve(L, b)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.levels import build_level_sets
 from repro.core.recurrence import linear_recurrence, recurrence_as_sptrsv
