@@ -34,7 +34,15 @@ err = float(jnp.max(jnp.abs(x0 - x1)))
 print(f"max |x_base - x_rewritten| = {err:.2e}")
 assert err < 1e-3
 
-# 5. the same transformation parallelizes linear recurrences (RG-LRU et al.)
+# 5. the backward sweep Lᵀ x = b is first-class and shares the analysis —
+#    one build_pair gives both halves of an IC(0)/LU preconditioner apply
+fwd, bwd = SpTRSV.build_pair(L, strategy="levelset")
+xt = np.asarray(bwd.solve(b))
+rt = L.transpose().matvec(xt.astype(np.float64)) - np.asarray(b, np.float64)
+print(f"transpose solve residual |Lᵀx - b| = {np.abs(rt).max():.2e}")
+assert np.abs(rt).max() < 1e-3
+
+# 6. the same transformation parallelizes linear recurrences (RG-LRU et al.)
 from repro.core.recurrence import linear_recurrence
 a = jnp.full((16,), 0.9)
 u = jnp.ones((16,))

@@ -2,7 +2,14 @@
 rewriting) and specialized code generation for SpTRSV, adapted to TPU/JAX."""
 from .analysis import MatrixAnalysis, analyze
 from .csr import CSRMatrix, eye_csr, from_coo, from_dense
-from .levels import LevelSets, build_level_sets, compute_levels
+from .levels import (
+    LevelSets,
+    build_level_sets,
+    build_reverse_level_sets,
+    compute_levels,
+    compute_reverse_levels,
+    compute_upper_levels,
+)
 from .rewrite import RewriteConfig, RewriteResult, RewriteStats, rewrite_matrix
 from .codegen import Schedule, build_schedule, make_levelset_solver, make_serial_solver
 from .solver import STRATEGIES, SpTRSV
@@ -16,7 +23,10 @@ __all__ = [
     "from_dense",
     "LevelSets",
     "build_level_sets",
+    "build_reverse_level_sets",
     "compute_levels",
+    "compute_reverse_levels",
+    "compute_upper_levels",
     "RewriteConfig",
     "RewriteResult",
     "RewriteStats",

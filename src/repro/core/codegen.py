@@ -20,6 +20,7 @@ Executors produced here are pure JAX; the Pallas kernels in
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable, List, Optional
 
 import jax
@@ -27,13 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .csr import CSRMatrix
-from .levels import LevelSets, build_level_sets
+from .levels import LevelSets, build_level_sets, compute_upper_levels
 from .rewrite import RewriteResult
 
 __all__ = [
     "LevelSlab",
     "Schedule",
     "EllMatrix",
+    "GATHER_UNROLL_MAX_K",
     "build_schedule",
     "build_ell",
     "make_serial_solver",
@@ -41,6 +43,14 @@ __all__ = [
     "make_rhs_transform",
     "ell_spmv",
 ]
+
+logger = logging.getLogger(__name__)
+
+# Batched gathers are unrolled over the ELL width K into K two-dimensional
+# row gathers (see _gather_sum) — ~50x faster on CPU than one (K, R, m)
+# gather.  Past this width the unrolled program would bloat compile time, so
+# _gather_sum falls back to the single fused 3-D gather (and logs it).
+GATHER_UNROLL_MAX_K = 32
 
 
 # --------------------------------------------------------------------------
@@ -99,7 +109,17 @@ class EllMatrix:
         return self.cols.shape[0]
 
 
-def _pack_rows(L: CSRMatrix, rows: np.ndarray, sort_by_nnz: bool) -> LevelSlab:
+def _pack_rows(
+    L: CSRMatrix, rows: np.ndarray, sort_by_nnz: bool, *, diag_first: bool = False
+) -> LevelSlab:
+    """Pack the given rows into one ELL slab.
+
+    ``diag_first=False`` assumes lower-triangular storage (diagonal last in
+    each row, the forward-solve layout); ``diag_first=True`` assumes
+    upper-triangular storage (diagonal first — rows of ``L.transpose()``,
+    i.e. columns of ``L``, the backward-solve layout).  Either way the slab
+    comes out identical in shape, so every executor downstream is
+    direction-agnostic."""
     row_nnz = L.indptr[rows + 1] - L.indptr[rows] - 1  # off-diagonal count
     if sort_by_nnz and rows.size > 1:
         order = np.argsort(row_nnz, kind="stable")
@@ -112,10 +132,15 @@ def _pack_rows(L: CSRMatrix, rows: np.ndarray, sort_by_nnz: bool) -> LevelSlab:
     diag = np.empty((R,), dtype=L.dtype)
     for r, i in enumerate(rows):
         c, v = L.row(int(i))
-        diag[r] = v[-1]
-        k = c.size - 1
-        cols[:k, r] = c[:-1]
-        vals[:k, r] = v[:-1]
+        if diag_first:
+            diag[r] = v[0]
+            c, v = c[1:], v[1:]
+        else:
+            diag[r] = v[-1]
+            c, v = c[:-1], v[:-1]
+        k = c.size
+        cols[:k, r] = c
+        vals[:k, r] = v
     return LevelSlab(rows=rows.astype(np.int32), cols=cols, vals=vals, diag=diag)
 
 
@@ -125,6 +150,7 @@ def build_schedule(
     *,
     sort_by_nnz: bool = True,
     bucket_pad_ratio: float = 0.0,
+    upper: bool = False,
 ) -> Schedule:
     """Pack each level into ELL slabs.
 
@@ -135,9 +161,16 @@ def build_schedule(
     every native row (measured 3.5x serial slowdown on lung2-like before this
     split; §Perf solver iteration 1).  Slabs of one level stay mutually
     independent — only level boundaries synchronize.
+
+    ``upper=True`` packs an upper-triangular matrix (diagonal stored first
+    per row) over its backward-substitution levels — the transpose-solve
+    schedule.  Pass ``L.transpose()`` (whose rows are columns of ``L``) plus
+    the reverse level sets derived from the forward analysis; the resulting
+    slabs feed the *same* executors/kernels as forward schedules.
     """
     if levels is None:
-        levels = build_level_sets(L)
+        level = compute_upper_levels(L) if upper else None
+        levels = build_level_sets(L, level=level)
     slabs = []
     for rows in levels.rows:
         if bucket_pad_ratio and bucket_pad_ratio > 1.0 and rows.size > 1:
@@ -152,10 +185,10 @@ def build_schedule(
                     nnz_sorted, kmin * bucket_pad_ratio, side="right"))
                 end = max(end, start + 1)
                 slabs.append(_pack_rows(L, np.sort(rows_sorted[start:end]),
-                                        sort_by_nnz))
+                                        sort_by_nnz, diag_first=upper))
                 start = end
         else:
-            slabs.append(_pack_rows(L, rows, sort_by_nnz))
+            slabs.append(_pack_rows(L, rows, sort_by_nnz, diag_first=upper))
     return Schedule(n=L.n, slabs=slabs, level_of_row=levels.level, nnz=L.nnz)
 
 
@@ -187,14 +220,29 @@ def _coef(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return a if x.ndim == 1 else a[..., None]
 
 
-def _gather_sum(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+def _gather_sum(
+    vals: jnp.ndarray,
+    cols: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    unroll_max_k: int = GATHER_UNROLL_MAX_K,
+) -> jnp.ndarray:
     """``sum_k vals[k] * x[cols[k]]`` over the static ELL width K.
 
     Single-RHS stays the paper's fused one-gather + reduce.  Batched x
     ``(n, m)`` instead unrolls the K axis into K row-gathers of ``(R, m)``:
     XLA's CPU gather of (K, R, m) row slices runs ~50x slower per element
-    than the same work as K two-dimensional gathers."""
-    if x.ndim == 1 or cols.shape[0] > 32:
+    than the same work as K two-dimensional gathers.  Slabs wider than
+    ``unroll_max_k`` (default :data:`GATHER_UNROLL_MAX_K`) fall back to the
+    fused 3-D gather — correct but slower; the fallback is logged at trace
+    time so wide-slab batched solves are diagnosable."""
+    if x.ndim == 1 or cols.shape[0] > unroll_max_k:
+        if x.ndim > 1:
+            logger.debug(
+                "_gather_sum: K=%d > unroll_max_k=%d — falling back to the "
+                "fused 3-D gather for this batched slab (slower on CPU)",
+                cols.shape[0], unroll_max_k,
+            )
         # single RHS, or rows wide enough that unrolling K gathers would
         # bloat the program: one fused gather + reduce
         return jnp.sum(_coef(vals, x) * x[cols], axis=0)
@@ -213,10 +261,16 @@ def ell_spmv(ell: EllMatrix, v: jnp.ndarray) -> jnp.ndarray:
     return _gather_sum(vals, cols, v)
 
 
-def make_serial_solver(L: CSRMatrix) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Algorithm 1 of the paper: row-serial forward substitution, as a
-    ``lax.scan`` over rows (the paper's serial baseline).  ``b`` may be
-    ``(n,)`` or ``(n, m)``; the scan carries all columns at once."""
+def make_serial_solver(
+    L: CSRMatrix, *, upper: bool = False
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Algorithm 1 of the paper: row-serial substitution as a ``lax.scan``
+    over rows (the paper's serial baseline).  ``b`` may be ``(n,)`` or
+    ``(n, m)``; the scan carries all columns at once.
+
+    ``upper=True`` takes an upper-triangular matrix (diagonal first per row,
+    e.g. ``L.transpose()``) and scans rows in *reverse* order — backward
+    substitution for the transpose solve ``Lᵀ x = b``."""
     row_nnz = L.row_nnz() - 1
     K = max(int(row_nnz.max()), 1)
     n = L.n
@@ -225,12 +279,20 @@ def make_serial_solver(L: CSRMatrix) -> Callable[[jnp.ndarray], jnp.ndarray]:
     for i in range(n):
         c, v = L.row(i)
         k = c.size - 1
-        cols[i, :k] = c[:-1]
-        vals[i, :k] = v[:-1]
-    diag = L.diagonal()
-    cols_d = jnp.asarray(cols)
-    vals_d = jnp.asarray(vals)
-    diag_d = jnp.asarray(diag)
+        if upper:
+            cols[i, :k] = c[1:]
+            vals[i, :k] = v[1:]
+        else:
+            cols[i, :k] = c[:-1]
+            vals[i, :k] = v[:-1]
+    diag = L.diagonal(first=upper)
+    order = np.arange(n, dtype=np.int32)
+    if upper:
+        order = order[::-1]
+    cols_d = jnp.asarray(cols[order])
+    vals_d = jnp.asarray(vals[order])
+    diag_d = jnp.asarray(diag[order])
+    idx = jnp.asarray(order)
 
     def solve(b: jnp.ndarray) -> jnp.ndarray:
         dt = b.dtype
@@ -245,8 +307,7 @@ def make_serial_solver(L: CSRMatrix) -> Callable[[jnp.ndarray], jnp.ndarray]:
             return x, ()
 
         x0 = jnp.zeros(b.shape, dtype=dt)
-        idx = jnp.arange(n, dtype=jnp.int32)
-        x, _ = jax.lax.scan(body, x0, (cols_d, vals_l, diag_l, b, idx))
+        x, _ = jax.lax.scan(body, x0, (cols_d, vals_l, diag_l, b[idx], idx))
         return x
 
     return solve

@@ -59,10 +59,19 @@ class CSRMatrix:
         assert self.indices.shape == self.data.shape
         if self.nnz:
             assert self.indices.min() >= 0 and self.indices.max() < m
-            # sorted columns within rows
-            for i in range(min(n, 64)):  # spot-check head; full check is O(nnz)
-                c, _ = self.row(i)
-                assert np.all(np.diff(c) > 0), f"row {i} columns not sorted/unique"
+            # sorted/unique columns within every row, O(nnz) vectorized:
+            # adjacent column ids must increase except across row boundaries
+            # (_pack_rows assumes the diagonal is the LAST entry of a row, so
+            # an unsorted row anywhere — not just in the first 64 — would
+            # silently corrupt the packed slabs).
+            increasing = np.diff(self.indices) > 0
+            starts = self.indptr[1:-1]
+            boundary = starts[(starts > 0) & (starts < self.nnz)] - 1
+            increasing[boundary] = True
+            bad = np.nonzero(~increasing)[0]
+            if bad.size:
+                i = int(np.searchsorted(self.indptr, bad[0], side="right")) - 1
+                raise AssertionError(f"row {i} columns not sorted/unique")
         return self
 
     def is_lower_triangular(self, *, strict_diag: bool = True) -> bool:
@@ -83,11 +92,38 @@ class CSRMatrix:
         return True
 
     # -- conversions ----------------------------------------------------------
-    def diagonal(self) -> np.ndarray:
-        """Diagonal entries; assumes lower-triangular with stored diagonal
-        (diagonal is the last entry of each row)."""
+    def diagonal(self, *, first: bool = False) -> np.ndarray:
+        """Diagonal entries of a triangular matrix with stored diagonal.
+
+        ``first=False`` (default) assumes lower-triangular storage — the
+        diagonal is the *last* entry of each row.  ``first=True`` assumes
+        upper-triangular storage (e.g. :meth:`transpose` of a lower factor) —
+        the diagonal is the *first* entry of each row.
+        """
+        if first:
+            return self.data[self.indptr[:-1]]
         last = self.indptr[1:] - 1
         return self.data[last]
+
+    def csc_view(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(colptr, row_indices, data)`` — CSC arrays of this matrix, which
+        are exactly the CSR arrays of its transpose.  O(nnz) (single stable
+        counting pass; no lexsort), with row ids ascending within each column.
+        """
+        n, m = self.shape
+        colptr = np.zeros(m + 1, dtype=np.int64)
+        np.add.at(colptr, self.indices + 1, 1)
+        colptr = np.cumsum(colptr)
+        rows = np.repeat(np.arange(n, dtype=np.int64), self.row_nnz())
+        order = np.argsort(self.indices, kind="stable")
+        return colptr, rows[order], self.data[order]
+
+    def transpose(self) -> "CSRMatrix":
+        """CSR of the transpose (= :meth:`csc_view` rebound as CSR).  For a
+        lower-triangular matrix this yields the upper-triangular factor with
+        the diagonal stored *first* in each row (``diagonal(first=True)``)."""
+        colptr, rows, vals = self.csc_view()
+        return CSRMatrix(colptr, rows, vals, (self.shape[1], self.shape[0]))
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros(self.shape, dtype=self.data.dtype)

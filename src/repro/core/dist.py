@@ -14,6 +14,11 @@ Two exchange strategies (hillclimb pair):
                    Bytes/level = O(n).  Paper-faithful port of "barrier".
 * ``all_gather`` — each device contributes only its R/ndev solved values;
                    bytes/level = O(R_level).  The optimized schedule.
+
+Transpose solves (``SpTRSV.build(L, transpose=True, strategy="distributed")``)
+flow through unchanged: a backward :class:`Schedule` packs columns of L over
+the reverse level sets, and sharding/collectives are schedule-agnostic —
+the collective count equals the number of *backward* levels.
 """
 from __future__ import annotations
 

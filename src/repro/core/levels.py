@@ -14,7 +14,14 @@ import numpy as np
 
 from .csr import CSRMatrix
 
-__all__ = ["LevelSets", "compute_levels", "build_level_sets"]
+__all__ = [
+    "LevelSets",
+    "compute_levels",
+    "compute_reverse_levels",
+    "compute_upper_levels",
+    "build_level_sets",
+    "build_reverse_level_sets",
+]
 
 
 def compute_levels(L: CSRMatrix) -> np.ndarray:
@@ -29,6 +36,71 @@ def compute_levels(L: CSRMatrix) -> np.ndarray:
         # off-diagonal dependencies only
         if hi - lo > 1:
             deps = cols[cols < i]
+            if deps.size:
+                level[i] = level[deps].max() + 1
+    return level
+
+
+def compute_reverse_levels(
+    L: CSRMatrix, forward: "LevelSets | None" = None
+) -> np.ndarray:
+    """Level of each row in the *transpose* solve ``Lᵀ x = b``, derived from
+    the forward CSR.
+
+    ``DAG_{Lᵀ}`` is ``DAG_L`` with every edge reversed (transpose row ``j``
+    depends on ``x[i]`` for each nonzero ``L[i, j]``, ``i > j``), so the
+    backward level sets come out of the *same* symbolic analysis as the
+    forward ones, scattering ``rlevel[j] = max(rlevel[j], rlevel[i] + 1)``
+    over ``L``'s own CSR arrays — no transpose matrix, no
+    reverse-permutation, no second DAG traversal.
+
+    When the forward :class:`LevelSets` are passed, the scatter runs as one
+    vectorized ``maximum.at`` per forward wavefront, highest level first
+    (every edge ``j -> i`` has ``level(j) < level(i)``, so by the time level
+    ``lv`` is swept all consumers of its rows are settled).  This is the
+    shared-analysis fast path — the per-row python loop only remains as the
+    fallback when no forward analysis exists.
+    """
+    n = L.n
+    rlevel = np.zeros(n, dtype=np.int64)
+    indptr, indices = L.indptr, L.indices
+    if forward is not None:
+        for rows in reversed(forward.rows):
+            starts = indptr[rows]
+            cnt = indptr[rows + 1] - starts
+            total = int(cnt.sum())
+            if total == 0:
+                continue
+            off = np.cumsum(cnt) - cnt
+            pos = np.repeat(starts - off, cnt) + np.arange(total)
+            cols = indices[pos]
+            mask = cols < np.repeat(rows, cnt)  # off-diagonal entries only
+            np.maximum.at(
+                rlevel, cols[mask], np.repeat(rlevel[rows] + 1, cnt)[mask])
+        return rlevel
+    for i in range(n - 1, -1, -1):
+        lo, hi = indptr[i], indptr[i + 1]
+        if hi - lo > 1:
+            cols = indices[lo:hi]
+            deps = cols[cols < i]
+            if deps.size:
+                np.maximum.at(rlevel, deps, rlevel[i] + 1)
+    return rlevel
+
+
+def compute_upper_levels(U: CSRMatrix) -> np.ndarray:
+    """Levels of the backward-substitution DAG of an *upper*-triangular CSR
+    (row ``i`` depends on columns ``j > i``).  ``compute_upper_levels(L.transpose())``
+    equals :func:`compute_reverse_levels(L)`; this gather form exists for
+    matrices that are only available in upper form (e.g. a rewritten Lᵀ)."""
+    n = U.n
+    level = np.zeros(n, dtype=np.int64)
+    indptr, indices = U.indptr, U.indices
+    for i in range(n - 1, -1, -1):
+        lo, hi = indptr[i], indptr[i + 1]
+        if hi - lo > 1:
+            cols = indices[lo:hi]
+            deps = cols[cols > i]
             if deps.size:
                 level[i] = level[deps].max() + 1
     return level
@@ -77,3 +149,17 @@ def build_level_sets(L: CSRMatrix, level: np.ndarray | None = None) -> LevelSets
         rows.append(np.sort(order[off : off + c]))
         off += c
     return LevelSets(level=level, rows=rows, counts=counts)
+
+
+def build_reverse_level_sets(
+    L: CSRMatrix,
+    rlevel: np.ndarray | None = None,
+    *,
+    forward: "LevelSets | None" = None,
+) -> LevelSets:
+    """Backward (``Lᵀ x = b``) level sets of a lower-triangular ``L``,
+    sharing the forward analysis (see :func:`compute_reverse_levels`; pass
+    ``forward`` to hit the vectorized per-wavefront derivation)."""
+    if rlevel is None:
+        rlevel = compute_reverse_levels(L, forward)
+    return build_level_sets(L, level=rlevel)

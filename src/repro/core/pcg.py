@@ -4,8 +4,10 @@ several numerical solutions").
 
 ``M^{-1} r`` = two triangular solves with the incomplete-Cholesky factor,
 each executed by the matrix-specialized (optionally rewritten) level-set
-solver.  The upper solve L^T z = y runs as a *lower* solve on the
-reverse-permuted system, so both solves share one executor family.
+solver.  The backward sweep ``Lᵀ z = y`` is a first-class transpose solve
+(``SpTRSV.build_pair``): its level sets are derived from the *same* forward
+DAG analysis, so one symbolic analysis serves both sweeps — no transposed
+copy, no reverse-permutation, no second analysis pipeline.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import CSRMatrix, from_dense
+from .csr import CSRMatrix
 from .rewrite import RewriteConfig
 from .solver import SpTRSV
 
@@ -52,39 +54,24 @@ class BatchedPCGResult:
     converged: np.ndarray      # (m,) bool
 
 
-def _transpose_csr(L: CSRMatrix) -> CSRMatrix:
-    n = L.n
-    rows = np.repeat(np.arange(n), L.row_nnz())
-    from .csr import from_coo
-    return from_coo(L.indices, rows, L.data, (n, n))
-
-
 def make_ic_preconditioner(
     L: CSRMatrix,
     *,
     strategy: str = "levelset",
     rewrite: Optional[RewriteConfig] = RewriteConfig(thin_threshold=2),
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Given lower factor L (A ≈ L Lᵀ) build z = (L Lᵀ)^{-1} r."""
-    n = L.n
-    P = np.arange(n)[::-1]
-    Lt = _transpose_csr(L)
-    # reverse-permute Lᵀ so it becomes lower-triangular
-    dense = None
-    # build permuted CSR without densifying: rows/cols reversed
-    from .csr import from_coo
-    rows = np.repeat(np.arange(n), Lt.row_nnz())
-    perm_rows = n - 1 - rows
-    perm_cols = n - 1 - Lt.indices
-    Lt_rev = from_coo(perm_rows, perm_cols, Lt.data, (n, n))
+    """Given lower factor L (A ≈ L Lᵀ) build z = (L Lᵀ)^{-1} r.
 
-    fwd = SpTRSV.build(L, strategy=strategy, rewrite=rewrite)
-    bwd = SpTRSV.build(Lt_rev, strategy=strategy, rewrite=rewrite)
+    Exactly **one** level-set analysis serves both sweeps: the backward
+    solver's level sets are the forward DAG's reverse levels and its slabs
+    are packed from an O(nnz) CSC view of ``L`` (``SpTRSV.build_pair``).
+    The legacy construction — transpose + reverse-permute + a second full
+    ``SpTRSV.build`` — is benchmarked against this one in
+    ``benchmarks/preconditioner.py``."""
+    fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite)
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
-        y = fwd.solve(r)
-        z_rev = bwd.solve(y[::-1])
-        return z_rev[::-1]
+        return bwd.solve(fwd.solve(r))
 
     return apply
 
@@ -98,10 +85,10 @@ def make_ic_preconditioner_batched(
     """Batched z = (L Lᵀ)^{-1} R for R: (n, m).
 
     The executors are batch-polymorphic, so this *is*
-    :func:`make_ic_preconditioner` — both triangular solves and the reversal
-    operate column-wise on (n, m) arrays.  Kept as a named entry point so
-    batched PCG call sites read explicitly and stay stable if the single-RHS
-    path ever specializes."""
+    :func:`make_ic_preconditioner` — both triangular solves (forward and
+    transpose) operate column-wise on (n, m) arrays.  Kept as a named entry
+    point so batched PCG call sites read explicitly and stay stable if the
+    single-RHS path ever specializes."""
     return make_ic_preconditioner(L, strategy=strategy, rewrite=rewrite)
 
 
@@ -119,10 +106,19 @@ def pcg(A: CSRMatrix, b: jnp.ndarray,
 
     x = jnp.zeros_like(b)
     r = b - matvec(x)
+    # Initialize the residual before the loop (maxiter=0 must return a
+    # well-formed result, not hit an unbound `res`), and guard b_norm == 0
+    # the same way pcg_batched does — otherwise b = 0 makes the tolerance
+    # test `res <= 0`, which never fires despite x = 0 being exact.
+    res = float(jnp.linalg.norm(r))
+    b_norm = float(jnp.linalg.norm(b))
+    if b_norm == 0.0:
+        b_norm = 1.0
+    if res <= tol * b_norm:
+        return PCGResult(x, 0, res, True)
     z = M_inv(r) if M_inv else r
     p = z
     rz = jnp.vdot(r, z)
-    b_norm = float(jnp.linalg.norm(b))
     for it in range(maxiter):
         Ap = matvec(p)
         alpha = rz / jnp.vdot(p, Ap)
@@ -172,7 +168,12 @@ def pcg_batched(A: CSRMatrix, B: jnp.ndarray,
     iters = np.full((m,), maxiter, dtype=np.int64)
     done = np.zeros((m,), dtype=bool)
     res = np.asarray(jnp.linalg.norm(R, axis=0))
+    # columns already at tolerance (e.g. zero RHS) converge in 0 iterations
+    done |= res <= tol * b_norm
+    iters[done] = 0
     for it in range(maxiter):
+        if done.all():
+            break
         AP = matvec(P)
         pap = jnp.sum(P * AP, axis=0)
         active = jnp.asarray(~done)

@@ -25,7 +25,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from .csr import CSRMatrix, from_coo
-from .levels import LevelSets, build_level_sets, compute_levels
+from .levels import LevelSets, build_level_sets, compute_levels, compute_upper_levels
 
 __all__ = ["RewriteConfig", "RewriteStats", "RewriteResult", "rewrite_matrix"]
 
@@ -92,17 +92,29 @@ def rewrite_matrix(
     L: CSRMatrix,
     levels: Optional[LevelSets] = None,
     config: RewriteConfig = RewriteConfig(),
+    *,
+    upper: bool = False,
 ) -> RewriteResult:
-    """Apply the equation-rewriting transformation to rows of thin levels."""
+    """Apply the equation-rewriting transformation to rows of thin levels.
+
+    ``upper=True`` rewrites an upper-triangular system (e.g. the transpose
+    factor ``L.transpose()`` of the backward sweep, whose diagonal is stored
+    first per row) over its backward-substitution levels.  The elimination
+    machinery is direction-agnostic — the only invariant it needs is that a
+    dependency always lives in a strictly lower level than its dependent row,
+    which holds for both DAG orientations — so the transposed system reuses
+    this function wholesale instead of a reverse-permuted copy of itself.
+    """
     if levels is None:
-        levels = build_level_sets(L)
+        level = compute_upper_levels(L) if upper else None
+        levels = build_level_sets(L, level=level)
     n = L.n
     orig_level = levels.level
     counts = levels.counts
     kept_levels = set(np.nonzero(counts > config.thin_threshold)[0].tolist())
     kept_levels.add(0)  # level 0 is always a valid destination
 
-    diag = L.diagonal()
+    diag = L.diagonal(first=upper)
     nnz_budget = int(config.max_fill_ratio * L.nnz)
 
     # Rows modified so far: row expression over x-columns, and over b-entries.
@@ -129,8 +141,11 @@ def rewrite_matrix(
     eliminations = 0
     rows_rewritten = 0
 
-    # Topological (row) order: every dependency j of row i has j < i, so its
-    # final (possibly rewritten) equation is already settled when we reach i.
+    # Level-ascending order: every dependency j of row i lives in a strictly
+    # lower level (j < i for lower-triangular systems, j > i for upper), so
+    # its final (possibly rewritten) equation is already settled when we
+    # reach i — thin levels below i's were processed in earlier iterations
+    # and kept-level rows are never modified.
     for lv in np.nonzero(counts <= config.thin_threshold)[0]:
         if lv == 0:
             continue  # level-0 rows have no dependencies to break
@@ -202,7 +217,8 @@ def rewrite_matrix(
 
     Lp = from_coo(r_rows, r_cols, np.asarray(r_vals, dtype=L.dtype), L.shape)
     E = from_coo(e_rows, e_cols, np.asarray(e_vals, dtype=L.dtype), L.shape)
-    new_levels = build_level_sets(Lp)
+    new_levels = build_level_sets(
+        Lp, level=compute_upper_levels(Lp) if upper else None)
 
     e_off = E.nnz - n
     stats = RewriteStats(

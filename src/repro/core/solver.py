@@ -4,24 +4,35 @@
     x = solver.solve(b)          # jit-compiled, matrix-specialized
     X = solver.solve(B)          # B: (n, m) — m systems in one pass
 
+    bwd = SpTRSV.build(L, transpose=True)    # solves Lᵀ x = b
+    fwd, bwd = SpTRSV.build_pair(L)          # both sweeps, one analysis
+
 Every strategy solves one RHS ``b: (n,)`` or a multi-RHS batch
 ``B: (n, m)`` (m independent systems sharing L).  Batching amortizes the
 per-level launch/synchronization cost over columns and widens the TPU lane
 dimension from R to R*m, which is where thin levels (the paper's lung2
 pathology) leave throughput on the table.
 
+``transpose=True`` makes the solver execute the *backward* sweep
+``Lᵀ x = b`` (the second half of every IC(0)/LU preconditioner apply).
+The transpose DAG is the forward DAG with its edges reversed, so the
+backward level sets are derived from the same symbolic analysis — no
+reverse-permuted copy of the matrix, no second ``from_coo``; the backward
+schedule packs columns of ``L`` (rows of ``L.transpose()``) into the same
+ELL slabs every executor/kernel already consumes.
+
 Strategy × capability matrix
 ----------------------------
-=================  ==========  =========  =========  ============
-strategy           single RHS  batched    rewrite    distributed
-=================  ==========  =========  =========  ============
-serial             yes         yes        yes        no
-levelset           yes         yes        yes        no
-levelset_unroll    yes         yes        yes        no
-pallas_level       yes         yes        yes        no
-pallas_fused       yes         yes        yes        no
-distributed        yes         yes        yes        yes (mesh axis)
-=================  ==========  =========  =========  ============
+=================  ==========  =========  =========  =========  ============
+strategy           single RHS  batched    rewrite    transpose  distributed
+=================  ==========  =========  =========  =========  ============
+serial             yes         yes        yes        yes        no
+levelset           yes         yes        yes        yes        no
+levelset_unroll    yes         yes        yes        yes        no
+pallas_level       yes         yes        yes        yes        no
+pallas_fused       yes         yes        yes        yes        no
+distributed        yes         yes        yes        yes        yes (mesh axis)
+=================  ==========  =========  =========  =========  ============
 
 Strategies
 ----------
@@ -39,6 +50,13 @@ Batched quickstart (PCG with many right-hand sides)::
     from repro.core.pcg import make_ic_preconditioner_batched, pcg_batched
     M_inv = make_ic_preconditioner_batched(Lfactor, strategy="levelset")
     res = pcg_batched(A, B, M_inv)     # B: (n, m); res.x: (n, m)
+
+Shared-analysis preconditioner quickstart (forward + backward sweep from one
+analysis)::
+
+    fwd, bwd = SpTRSV.build_pair(L, strategy="levelset",
+                                 rewrite=RewriteConfig(thin_threshold=2))
+    z = bwd.solve(fwd.solve(r))        # z = (L Lᵀ)^{-1} r
 """
 from __future__ import annotations
 
@@ -58,7 +76,7 @@ from .codegen import (
     make_serial_solver,
 )
 from .csr import CSRMatrix
-from .levels import build_level_sets
+from .levels import LevelSets, build_level_sets, build_reverse_level_sets
 from .rewrite import RewriteConfig, RewriteResult, rewrite_matrix
 
 __all__ = ["SpTRSV", "STRATEGIES"]
@@ -75,7 +93,11 @@ STRATEGIES = (
 
 @dataclasses.dataclass
 class SpTRSV:
-    """A matrix-specialized, jit-compiled triangular solver."""
+    """A matrix-specialized, jit-compiled triangular solver.
+
+    ``transpose=True`` solvers execute the backward sweep ``Lᵀ x = b``; the
+    executor machinery is identical — only the schedule (backward level sets,
+    column-packed slabs) differs."""
 
     n: int
     strategy: str
@@ -84,12 +106,14 @@ class SpTRSV:
     rewrite_result: Optional[RewriteResult]
     _solve_fn: Callable[[jnp.ndarray], jnp.ndarray]
     _rhs_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]]
+    transpose: bool = False
 
     @staticmethod
     def build(
         L: CSRMatrix,
         *,
         strategy: str = "levelset",
+        transpose: bool = False,
         rewrite: Optional[RewriteConfig] = None,
         unroll_threshold: int = 4,
         bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
@@ -99,24 +123,79 @@ class SpTRSV:
         interpret: bool = True,
         jit: bool = True,
     ) -> "SpTRSV":
-        assert strategy in STRATEGIES, strategy
+        """Build a solver for ``L x = b`` (or ``Lᵀ x = b`` with
+        ``transpose=True``).  ``L`` is always the lower-triangular factor."""
+        assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
+        if transpose:
+            system, levels = L.transpose(), build_reverse_level_sets(L)
+        else:
+            system, levels = L, build_level_sets(L)
+        return SpTRSV._build_system(
+            system, levels, upper=transpose,
+            strategy=strategy, rewrite=rewrite,
+            unroll_threshold=unroll_threshold,
+            bucket_pad_ratio=bucket_pad_ratio,
+            mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
+            interpret=interpret, jit=jit,
+        )
+
+    @staticmethod
+    def build_pair(L: CSRMatrix, **kwargs) -> tuple["SpTRSV", "SpTRSV"]:
+        """Build ``(forward, backward)`` solvers — ``L y = b`` and
+        ``Lᵀ z = y`` — from **one** shared symbolic analysis.
+
+        The backward level sets are derived from the forward DAG arrays
+        (:func:`repro.core.levels.compute_reverse_levels`) and the backward
+        schedule is packed from an O(nnz) CSC view of ``L`` — the whole
+        reverse-permute + second-analysis pipeline of the legacy
+        preconditioner path is gone.  Accepts the same keyword arguments as
+        :meth:`build` (except ``transpose``)."""
+        assert "transpose" not in kwargs, "build_pair builds both directions"
         assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
         levels = build_level_sets(L)
-        analysis = analyze(L, levels)
+        fwd = SpTRSV._build_system(L, levels, upper=False, **kwargs)
+        # backward levels derived from the forward wavefronts — the shared
+        # analysis; no second per-row DAG traversal
+        bwd = SpTRSV._build_system(
+            L.transpose(), build_reverse_level_sets(L, forward=levels),
+            upper=True, **kwargs)
+        return fwd, bwd
+
+    @staticmethod
+    def _build_system(
+        system: CSRMatrix,
+        levels: LevelSets,
+        *,
+        upper: bool,
+        strategy: str = "levelset",
+        rewrite: Optional[RewriteConfig] = None,
+        unroll_threshold: int = 4,
+        bucket_pad_ratio: float = 0.0,
+        mesh=None,
+        mesh_axis: str = "data",
+        dist_strategy: str = "all_gather",
+        interpret: bool = True,
+        jit: bool = True,
+    ) -> "SpTRSV":
+        """Shared builder: ``system`` is the triangular matrix of the system
+        actually solved (``L`` forward, ``L.transpose()`` backward) with its
+        level sets already analyzed."""
+        assert strategy in STRATEGIES, strategy
+        analysis = analyze(system, levels)
 
         rres: Optional[RewriteResult] = None
         rhs_fn = None
-        target, target_levels = L, levels
+        target, target_levels = system, levels
         if rewrite is not None:
-            rres = rewrite_matrix(L, levels, rewrite)
+            rres = rewrite_matrix(system, levels, rewrite, upper=upper)
             rhs_fn = make_rhs_transform(rres)
             target, target_levels = rres.L, rres.levels
 
         schedule: Optional[Schedule] = None
         if strategy == "serial":
-            fn = make_serial_solver(target)
+            fn = make_serial_solver(target, upper=upper)
         elif strategy in ("levelset", "levelset_unroll"):
-            schedule = build_schedule(target, target_levels,
+            schedule = build_schedule(target, target_levels, upper=upper,
                                       bucket_pad_ratio=bucket_pad_ratio)
             fn = make_levelset_solver(
                 schedule,
@@ -125,18 +204,18 @@ class SpTRSV:
         elif strategy == "pallas_level":
             from repro.kernels.sptrsv_level import ops as level_ops
 
-            schedule = build_schedule(target, target_levels)
+            schedule = build_schedule(target, target_levels, upper=upper)
             fn = level_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "pallas_fused":
             from repro.kernels.sptrsv_fused import ops as fused_ops
 
-            schedule = build_schedule(target, target_levels)
+            schedule = build_schedule(target, target_levels, upper=upper)
             fn = fused_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "distributed":
             from .dist import make_distributed_solver, shard_schedule
 
             assert mesh is not None, "distributed strategy needs a mesh"
-            schedule = build_schedule(target, target_levels)
+            schedule = build_schedule(target, target_levels, upper=upper)
             ndev = int(np.prod([mesh.shape[a] for a in (mesh_axis,)]))
             dsched = shard_schedule(schedule, ndev)
             fn = make_distributed_solver(dsched, mesh, mesh_axis, strategy=dist_strategy)
@@ -154,20 +233,22 @@ class SpTRSV:
         else:
             solve_fn = jax.jit(fn) if jit else fn
         return SpTRSV(
-            n=L.n,
+            n=system.n,
             strategy=strategy,
             analysis=analysis,
             schedule=schedule,
             rewrite_result=rres,
             _solve_fn=solve_fn,
             _rhs_fn=rhs_fn,
+            transpose=upper,
         )
 
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:
-        """Solve L x = b.  ``b`` may be ``(n,)`` (one system) or ``(n, m)``
-        (m independent systems solved in one batched pass).  Each distinct
-        batch width compiles once (shapes are trace-time constants — the
-        executor is matrix- *and* batch-specialized)."""
+        """Solve L x = b (or Lᵀ x = b for a ``transpose`` solver).  ``b``
+        may be ``(n,)`` (one system) or ``(n, m)`` (m independent systems
+        solved in one batched pass).  Each distinct batch width compiles
+        once (shapes are trace-time constants — the executor is matrix-
+        *and* batch-specialized)."""
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(
                 f"b must be ({self.n},) or ({self.n}, m); got {b.shape}")

@@ -1,5 +1,10 @@
 """Jit'd wrapper: pack a Schedule into the fused level-order layout and
-solve with one pallas_call."""
+solve with one pallas_call.
+
+Direction-agnostic: backward (transpose) schedules permute rows by *reverse*
+level order, so all dependency positions still precede their consumers in
+the grid walk; padding slots gather val-0 entries against the zero-initialized
+VMEM scratch and contribute nothing."""
 from __future__ import annotations
 
 import dataclasses

@@ -1,4 +1,8 @@
-"""Jit'd wrapper: whole-matrix level-set solve using the level kernel."""
+"""Jit'd wrapper: whole-matrix level-set solve using the level kernel.
+
+Direction-agnostic: a backward (transpose) :class:`Schedule` — column-packed
+slabs over reverse level sets — runs through the same kernels; nothing here
+assumes which triangle the slabs came from."""
 from __future__ import annotations
 
 from typing import Callable

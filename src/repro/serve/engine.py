@@ -122,10 +122,14 @@ class ServeEngine:
 # ==========================================================================
 @dataclasses.dataclass
 class SolveRequest:
-    """One RHS vector to solve against the engine's fixed factor L."""
+    """One RHS vector to solve against the engine's fixed factor L.
+
+    ``transpose=True`` requests the backward sweep ``Lᵀ x = b`` (requires the
+    engine to hold a transpose solver)."""
 
     rid: int
     b: np.ndarray                   # (n,)
+    transpose: bool = False
     x: Optional[np.ndarray] = None  # set when done
     done: bool = False
 
@@ -139,15 +143,23 @@ class SolveEngine:
     ``L X = B``, so per-level launch overhead and the lane underfill of thin
     levels amortize over the batch width.
 
+    An optional ``solver_t`` (typically the second half of
+    ``SpTRSV.build_pair``) serves transpose requests ``Lᵀ x = b``; each
+    drained step batches the two directions separately (they are distinct
+    specialized executors) but drains them from one queue.
+
     Batch widths are rounded up to the next bucket (powers of ``bucket_base``
     up to ``max_batch``, padding columns with zeros) so the jit cache stays
-    bounded: at most log(max_batch) compiled variants, not one per queue
-    depth.
+    bounded: at most log(max_batch) compiled variants per direction, not one
+    per queue depth.
     """
 
-    def __init__(self, solver, *, max_batch: int = 64, bucket_base: int = 2):
+    def __init__(self, solver, solver_t=None, *, max_batch: int = 64,
+                 bucket_base: int = 2):
         assert max_batch >= 1
         self.solver = solver
+        self.solver_t = solver_t
+        assert solver_t is None or solver_t.n == solver.n
         self.max_batch = max_batch
         self.bucket_base = max(2, bucket_base)
         self.queue: deque = deque()
@@ -155,10 +167,12 @@ class SolveEngine:
         self.batches = 0
         self._next_rid = 0
 
-    def submit(self, b: np.ndarray) -> SolveRequest:
+    def submit(self, b: np.ndarray, *, transpose: bool = False) -> SolveRequest:
         b = np.asarray(b)
         assert b.ndim == 1 and b.shape[0] == self.solver.n, b.shape
-        req = SolveRequest(rid=self._next_rid, b=b)
+        assert not transpose or self.solver_t is not None, \
+            "transpose request but engine was built without a transpose solver"
+        req = SolveRequest(rid=self._next_rid, b=b, transpose=transpose)
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -170,24 +184,33 @@ class SolveEngine:
             m *= self.bucket_base
         return min(m, self.max_batch)
 
+    def _solve_group(self, solver, reqs) -> None:
+        m = self._bucket(len(reqs))
+        dtype = np.result_type(*(r.b.dtype for r in reqs))
+        B = np.zeros((solver.n, m), dtype=dtype)
+        for j, r in enumerate(reqs):
+            B[:, j] = r.b
+        X = np.asarray(solver.solve_batched(jnp.asarray(B)))
+        for j, r in enumerate(reqs):
+            r.x = X[:, j]
+            r.done = True
+        self.batches += 1
+
     def step(self) -> int:
-        """Drain up to ``max_batch`` queued requests as one batched solve.
-        Returns the number of requests completed (0 if the queue is empty)."""
+        """Drain up to ``max_batch`` queued requests, batched per direction
+        (forward / transpose).  Returns the number of requests completed
+        (0 if the queue is empty)."""
         if not self.queue:
             return 0
         take = min(len(self.queue), self.max_batch)
         reqs = [self.queue.popleft() for _ in range(take)]
-        m = self._bucket(take)
-        dtype = np.result_type(*(r.b.dtype for r in reqs))
-        B = np.zeros((self.solver.n, m), dtype=dtype)
-        for j, r in enumerate(reqs):
-            B[:, j] = r.b
-        X = np.asarray(self.solver.solve_batched(jnp.asarray(B)))
-        for j, r in enumerate(reqs):
-            r.x = X[:, j]
-            r.done = True
+        fwd = [r for r in reqs if not r.transpose]
+        bwd = [r for r in reqs if r.transpose]
+        if fwd:
+            self._solve_group(self.solver, fwd)
+        if bwd:
+            self._solve_group(self.solver_t, bwd)
         self.solved += take
-        self.batches += 1
         return take
 
     def run(self) -> int:

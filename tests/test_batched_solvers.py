@@ -175,3 +175,26 @@ def test_pcg_batched_matches_single():
         np.testing.assert_allclose(np.asarray(res.x[:, j]),
                                    np.asarray(single.x),
                                    rtol=1e-3, atol=1e-4)
+
+
+def test_wide_slab_batched_gather_fallback_matches_oracle():
+    """Slabs wider than GATHER_UNROLL_MAX_K silently fall back from the
+    K-unrolled 2-D gathers to the fused 3-D gather; the fallback must stay
+    correct (it is only slower).  banded_lower with full fill at bandwidth
+    40 forces K > 32 in the fat levels."""
+    from repro.core.codegen import GATHER_UNROLL_MAX_K
+    from repro.sparse import banded_lower
+
+    L = banded_lower(160, bandwidth=GATHER_UNROLL_MAX_K + 8, fill=1.0,
+                     seed=3, dtype=np.float32)
+    assert int((L.row_nnz() - 1).max()) > GATHER_UNROLL_MAX_K
+    rng = np.random.default_rng(9)
+    B = rng.normal(size=(L.n, 6)).astype(np.float32)
+    X_ref = np_fsolve(L.astype(np.float64), B.astype(np.float64))
+    for strategy in ("serial", "levelset"):
+        s = SpTRSV.build(L, strategy=strategy)
+        assert strategy == "serial" or any(
+            slab.K > GATHER_UNROLL_MAX_K for slab in s.schedule.slabs)
+        X = np.asarray(s.solve_batched(jnp.asarray(B)))
+        np.testing.assert_allclose(X, X_ref, rtol=2e-3, atol=2e-4,
+                                   err_msg=strategy)

@@ -32,3 +32,56 @@ def test_preconditioner_solve_exact_on_triangular_system():
     w = Ld @ (Ld.T @ v)
     got = np.asarray(M(jnp.asarray(w)))
     np.testing.assert_allclose(got, v, rtol=1e-4, atol=1e-5)  # f32 solves
+
+
+# --------------------------------------------------------------------------
+# regression: degenerate inputs must return well-formed results
+# --------------------------------------------------------------------------
+def test_pcg_maxiter_zero_returns_wellformed():
+    """maxiter=0 used to crash with UnboundLocalError on `res`; it must
+    return the initial iterate with a finite residual."""
+    A = poisson2d(8, 8, dtype=np.float32)
+    b = jnp.asarray(np.random.default_rng(0).normal(size=A.n).astype(np.float32))
+    res = pcg(A, b, None, maxiter=0)
+    assert not res.converged
+    assert res.iters == 0
+    assert np.isfinite(res.residual)
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+def test_pcg_zero_rhs_converges_immediately():
+    """b = 0 used to make the tolerance test `res <= 0` (b_norm == 0) and
+    spin to maxiter; x = 0 is exact and must converge in 0 iterations."""
+    A = poisson2d(8, 8, dtype=np.float32)
+    res = pcg(A, jnp.zeros(A.n, jnp.float32), None, maxiter=50)
+    assert res.converged
+    assert res.iters == 0
+    assert res.residual == 0.0
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+    # with a preconditioner too (exercises M_inv on the zero residual path)
+    L = ic0_factor(A)
+    M = make_ic_preconditioner(L, rewrite=None)
+    res_m = pcg(A, jnp.zeros(A.n, jnp.float32), M, maxiter=50)
+    assert res_m.converged and np.isfinite(np.asarray(res_m.x)).all()
+
+
+def test_pcg_batched_maxiter_zero_and_zero_rhs():
+    from repro.core.pcg import pcg_batched
+
+    A = poisson2d(8, 8, dtype=np.float32)
+    rng = np.random.default_rng(1)
+    b = rng.normal(size=A.n).astype(np.float32)
+    # maxiter=0: well-formed, nothing converged
+    res0 = pcg_batched(A, jnp.stack([b, b], axis=1), None, maxiter=0)
+    assert (~res0.converged).all()
+    assert np.isfinite(res0.residual).all()
+    assert np.isfinite(np.asarray(res0.x)).all()
+    # mixed batch: a zero column converges in 0 iters without perturbing
+    # the nonzero column, and produces no NaN
+    B = np.stack([np.zeros_like(b), b], axis=1)
+    res = pcg_batched(A, jnp.asarray(B), None, tol=1e-5, maxiter=300)
+    assert res.converged.all()
+    assert res.iters[0] == 0
+    assert res.iters[1] > 0
+    assert np.isfinite(np.asarray(res.x)).all()
+    np.testing.assert_array_equal(np.asarray(res.x[:, 0]), 0.0)
