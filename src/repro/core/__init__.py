@@ -12,6 +12,15 @@ from .levels import (
 )
 from .rewrite import RewriteConfig, RewriteResult, RewriteStats, rewrite_matrix
 from .codegen import Schedule, build_schedule, make_levelset_solver, make_serial_solver
+from .coarsen import (
+    CoarsenConfig,
+    CoarsenStats,
+    PlanDecision,
+    coarsen_schedule,
+    coarsen_stats,
+    plan_strategy,
+    schedule_cost,
+)
 from .solver import STRATEGIES, SpTRSV
 
 __all__ = [
@@ -35,6 +44,13 @@ __all__ = [
     "build_schedule",
     "make_levelset_solver",
     "make_serial_solver",
+    "CoarsenConfig",
+    "CoarsenStats",
+    "PlanDecision",
+    "coarsen_schedule",
+    "coarsen_stats",
+    "plan_strategy",
+    "schedule_cost",
     "STRATEGIES",
     "SpTRSV",
 ]

@@ -1,0 +1,309 @@
+"""Synchronization-aware schedule coarsening + cost-model strategy planner.
+
+The paper removes barriers by *rewriting equations* so thin levels empty
+out.  This module applies the complementary lever (Böhnlein et al.,
+arXiv:2503.05408): *merge* adjacent levels under a cost model instead of
+changing the matrix.  A run of (mostly thin) levels becomes one **super-level
+slab** carrying an intra-slab dependency chain (``LevelSlab.sub_rows``): the
+sub-slabs execute back-to-back inside a single segment — one generated code
+region / kernel launch / collective — so a lung2-class schedule collapses
+from ~478 segments to a few dozen while the floating-point work per row is
+**unchanged** (same gather-sum, same operands, same order; only zero padding
+is added).  Results are typically bit-identical and always within a few ulp
+of the uncoarsened executor — XLA may re-contract the zero-padded reduction
+(FMA / tree shape) when compiling the merged segment.
+
+Cost model
+----------
+Executing a slab costs ``segment_cost`` (launch + barrier + its share of XLA
+program size / compile time, in FLOP-equivalents) plus its padded FLOPs.  A
+merged group of ``d`` levels executes ``d`` uniform sub-steps padded to the
+widest member — FLOP waste ``d*(2*Kmax*Rmax + Rmax) - sum_i work_i`` — but
+pays ``segment_cost`` once instead of ``d`` times.  The greedy pass extends a
+group while the waste stays below the segments saved.  Thin runs (R=2) merge
+essentially for free; a fat wavefront next to a thin run is rejected because
+padding every sub-step to the fat width would dwarf the saved barriers.
+
+Strategy planner
+----------------
+:func:`plan_strategy` picks serial / levelset / levelset_unroll /
+pallas_fused for ``SpTRSV.build(..., strategy="auto")`` from the
+:class:`~repro.core.analysis.MatrixAnalysis` and schedule cost — chains go to
+the ``lax.scan`` serial solver, level-parallel matrices to the (coarsened)
+level-set executors, VMEM-sized matrices on a real TPU to the fused kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .analysis import MatrixAnalysis
+from .codegen import LevelSlab, Schedule, slab_padded_flops
+
+__all__ = [
+    "CoarsenConfig",
+    "CoarsenStats",
+    "coarsen_schedule",
+    "coarsen_stats",
+    "schedule_cost",
+    "PlanDecision",
+    "plan_strategy",
+    "SEGMENT_COST",
+    "SUBSTEP_COST",
+    "SERIAL_STEP_COST",
+    "SERIAL_STEP_COST_SCALE",
+]
+
+# Cost of one barrier-separated segment, in FLOP-equivalents: dispatch of a
+# gather/FMA/scatter group plus its share of program size.  Microseconds of
+# launch/sync overhead at ~1 GFLOP/s effective SpTRSV throughput lands in the
+# low thousands; the exact value only needs to separate "thin level" (work
+# ~10 flops) from "fat level" (work >> segment_cost).
+SEGMENT_COST = 4096.0
+
+# Cost of one intra-chain sub-step (a fori_loop iteration: dynamic-slice of
+# the stacked constants + the gather/FMA/scatter body).  Cheaper than a full
+# segment — no barrier, no new program region — but not free; without this
+# term the model would happily chain a fat wavefront onto a thin run and pay
+# its padded width once per sub-step.
+SUBSTEP_COST = SEGMENT_COST / 2
+
+# Cost of one lax.scan step of the serial solver, FLOP-equivalents.  Rows of
+# the serial scan are latency- not throughput-bound, and the measured
+# per-row cost GROWS with n (the scan carries the whole x vector, so big
+# systems fall out of cache): ~60ns/row at n=1.5k but ~5us/row at n=33k on
+# CPU.  Modelled as base + scale*n per row — small systems legitimately
+# solve fastest serially, large ones never do.
+SERIAL_STEP_COST = 16.0
+SERIAL_STEP_COST_SCALE = 0.06
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenConfig:
+    """Knobs of the coarsening cost model.
+
+    ``max_depth``       longest intra-slab chain (bounds stacked-constant
+                        memory ``d * K * Rmax`` and fori_loop trip count)
+    ``max_chain_rows``  widest slab allowed inside a chain.  Chains exist to
+                        absorb *thin* levels; a fat wavefront executes its
+                        full width once per chained sub-step it rides along
+                        with, which the flop terms under-bill when its K is
+                        small (level-0 fat slabs have K=1), so wide slabs
+                        always stand alone as plain parallel segments.
+    ``segment_cost``    launch/sync/program-size cost per segment,
+                        FLOP-equivalents (see :data:`SEGMENT_COST`)
+    ``step_cost``       per-sub-step chain overhead (:data:`SUBSTEP_COST`)
+    """
+
+    max_depth: int = 32
+    max_chain_rows: int = 128
+    segment_cost: float = SEGMENT_COST
+    step_cost: float = SUBSTEP_COST
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenStats:
+    segments_before: int
+    segments_after: int
+    padded_flops_before: int
+    padded_flops_after: int
+
+    @property
+    def segment_reduction(self) -> float:
+        return self.segments_before / max(self.segments_after, 1)
+
+    def summary(self) -> str:
+        return (
+            f"segments {self.segments_before} -> {self.segments_after} "
+            f"({self.segment_reduction:.1f}x fewer sync points), "
+            f"padded FLOPs {self.padded_flops_before} -> "
+            f"{self.padded_flops_after} "
+            f"(+{100 * (self.padded_flops_after / max(self.padded_flops_before, 1) - 1):.1f}%)"
+        )
+
+
+def _slab_work(s: LevelSlab, unroll_threshold: int) -> float:
+    """Executed FLOPs of one slab — the same per-slab formula
+    ``Schedule.padded_flops`` sums, so merge decisions and planner costs
+    can never drift apart."""
+    return float(slab_padded_flops(s, unroll_threshold))
+
+
+def _merge_group(group: list) -> LevelSlab:
+    """Concatenate a group of plain slabs into one super-slab.  Sub-slab t
+    keeps its exact packing (row order, values); only zero padding up to the
+    group-wide K is added, so executors consume the identical operand sets
+    the uncoarsened slabs would."""
+    if len(group) == 1:
+        return group[0]
+    K = max(s.K for s in group)
+    R = sum(s.R for s in group)
+    rows = np.concatenate([s.rows for s in group]).astype(np.int32)
+    diag = np.concatenate([s.diag for s in group])
+    cols = np.zeros((K, R), dtype=np.int32)
+    vals = np.zeros((K, R), dtype=group[0].vals.dtype)
+    off = 0
+    for s in group:
+        cols[: s.K, off : off + s.R] = s.cols
+        vals[: s.K, off : off + s.R] = s.vals
+        off += s.R
+    return LevelSlab(rows=rows, cols=cols, vals=vals, diag=diag,
+                     sub_rows=tuple(s.R for s in group))
+
+
+def coarsen_schedule(
+    schedule: Schedule,
+    config: CoarsenConfig = CoarsenConfig(),
+    *,
+    unroll_threshold: int = 0,
+) -> Schedule:
+    """Greedy synchronization-aware level merging.
+
+    Walks the slab sequence in order (any prefix-respecting grouping is
+    correct: slab order is a topological order of the dependency DAG, and a
+    chain over slabs that happen to be independent is merely conservative).
+    A slab joins the open group iff the group's merged execution cost —
+    ``d * (2*Kmax*Rmax + Rmax)`` for ``d`` uniform chained sub-steps — does
+    not exceed executing it separately plus the ``segment_cost`` the merge
+    saves.  Already-coarsened slabs pass through untouched (idempotent).
+    """
+    slabs = schedule.slabs
+    if len(slabs) <= 1 or config.max_depth <= 1:
+        return schedule
+    out: list = []
+    group: list = []
+    g_kmax = g_rmax = 0
+
+    def flush():
+        nonlocal group, g_kmax, g_rmax
+        if group:
+            out.append(_merge_group(group))
+        group, g_kmax, g_rmax = [], 0, 0
+
+    for s in slabs:
+        # pre-coarsened input and fat wavefronts stay their own segments
+        if s.depth > 1 or s.R > config.max_chain_rows:
+            flush()
+            out.append(s)
+            continue
+        if group:
+            d2 = len(group) + 1
+            k2 = max(g_kmax, s.K)
+            r2 = max(g_rmax, s.R)
+            merged = d2 * (2 * k2 * r2 + r2 + config.step_cost)
+            prev_merged = len(group) * (
+                2 * g_kmax * g_rmax + g_rmax + config.step_cost)
+            separate = prev_merged + _slab_work(s, unroll_threshold) \
+                + config.segment_cost
+            if d2 <= config.max_depth and merged <= separate:
+                group.append(s)
+                g_kmax, g_rmax = k2, r2
+                continue
+            flush()
+        group = [s]
+        g_kmax, g_rmax = s.K, s.R
+    flush()
+    return Schedule(n=schedule.n, slabs=out,
+                    level_of_row=schedule.level_of_row, nnz=schedule.nnz)
+
+
+def coarsen_stats(before: Schedule, after: Schedule,
+                  unroll_threshold: int = 0) -> CoarsenStats:
+    return CoarsenStats(
+        segments_before=before.num_segments,
+        segments_after=after.num_segments,
+        padded_flops_before=before.padded_flops(unroll_threshold),
+        padded_flops_after=after.padded_flops(unroll_threshold),
+    )
+
+
+# --------------------------------------------------------------------------
+# Strategy planner
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """Outcome of :func:`plan_strategy` — recorded on the built solver so
+    ``strategy="auto"`` choices are auditable."""
+
+    strategy: str
+    coarsen: bool
+    reason: str
+    costs: Dict[str, float]
+
+
+def schedule_cost(schedule: Schedule, *, unroll_threshold: int = 0,
+                  segment_cost: float = SEGMENT_COST,
+                  step_cost: float = SUBSTEP_COST) -> float:
+    """Modelled per-solve cost of a level-set schedule: executed (padded)
+    FLOPs, per-segment launch/sync overhead, and per-chain-sub-step loop
+    overhead for coarsened slabs."""
+    return (schedule.padded_flops(unroll_threshold)
+            + segment_cost * schedule.num_segments
+            + step_cost * (schedule.total_depth - schedule.num_segments))
+
+
+# f32 VMEM budget for the fused kernel's resident x (~16 MiB, leave half for
+# slab blocks) — the fused kernel is only planned on a real TPU backend.
+_FUSED_VMEM_ROWS = 2_000_000
+
+
+def plan_strategy(
+    analysis: MatrixAnalysis,
+    schedule: Schedule,
+    coarsened: Optional[Schedule] = None,
+    *,
+    unroll_threshold: int = 4,
+    segment_cost: float = SEGMENT_COST,
+    backend: Optional[str] = None,
+    interpret: bool = True,
+) -> PlanDecision:
+    """Pick an execution strategy from the analysis + schedule cost model.
+
+    ``schedule`` is the uncoarsened schedule of the (possibly rewritten)
+    system; ``coarsened`` its coarsened counterpart when coarsening is on the
+    table.  The Pallas fused kernel is only a candidate on a TPU backend
+    with ``interpret=False`` — interpret mode is a correctness harness,
+    never a performance win, and the cost below models the compiled kernel.
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+
+    costs: Dict[str, float] = {}
+    # serial lax.scan: one segment, but every row is a latency-bound scan
+    # step whose cost grows with the carried vector size
+    costs["serial"] = analysis.solve_flops + analysis.n * (
+        SERIAL_STEP_COST + SERIAL_STEP_COST_SCALE * analysis.n)
+    costs["levelset"] = schedule_cost(schedule, unroll_threshold=0,
+                                      segment_cost=segment_cost)
+    costs["levelset_unroll"] = schedule_cost(
+        schedule, unroll_threshold=unroll_threshold, segment_cost=segment_cost)
+    if coarsened is not None:
+        costs["levelset+coarsen"] = schedule_cost(
+            coarsened, unroll_threshold=0, segment_cost=segment_cost)
+        costs["levelset_unroll+coarsen"] = schedule_cost(
+            coarsened, unroll_threshold=unroll_threshold,
+            segment_cost=segment_cost)
+    if backend == "tpu" and not interpret and analysis.n <= _FUSED_VMEM_ROWS:
+        # whole solve in one kernel: one segment, x resident in VMEM; padded
+        # work bounded by the widest slab's K over all rows
+        kmax = max((s.K for s in schedule.slabs), default=1)
+        costs["pallas_fused"] = 2 * kmax * analysis.n + analysis.n + segment_cost
+
+    best = min(costs, key=costs.get)
+    strategy, _, tag = best.partition("+")
+    decision = PlanDecision(
+        strategy=strategy,
+        coarsen=(tag == "coarsen"),
+        reason=(
+            f"min modelled cost {costs[best]:.0f} among "
+            + ", ".join(f"{k}={v:.0f}" for k, v in sorted(costs.items()))
+            + f" (n={analysis.n}, levels={analysis.num_levels}, "
+            f"thin_fraction={analysis.thin_fraction_2:.2f}, backend={backend})"
+        ),
+        costs=costs,
+    )
+    return decision

@@ -38,6 +38,8 @@ __all__ = [
     "GATHER_UNROLL_MAX_K",
     "build_schedule",
     "build_ell",
+    "slab_padded_flops",
+    "stack_sub_slabs",
     "make_serial_solver",
     "make_levelset_solver",
     "make_rhs_transform",
@@ -62,12 +64,21 @@ class LevelSlab:
 
     ``rows`` (R,) row ids;  ``cols``/``vals`` (K, R) with zero-padding
     (col 0 / val 0.0 is a safe no-op gather);  ``diag`` (R,).
+
+    ``sub_rows`` is the slab's intra-slab dependency chain (schedule
+    coarsening, :mod:`repro.core.coarsen`): when non-empty it partitions the
+    R rows into consecutive *sub-slabs* that must execute back-to-back in
+    order — sub-slab ``t`` may depend on rows of sub-slabs ``< t`` — but the
+    whole chain forms **one** segment: a single barrier/launch/collective
+    covers all of it.  An empty tuple means the classic one-level slab (all
+    rows mutually independent).
     """
 
     rows: np.ndarray
     cols: np.ndarray
     vals: np.ndarray
     diag: np.ndarray
+    sub_rows: tuple = ()
 
     @property
     def R(self) -> int:
@@ -76,6 +87,28 @@ class LevelSlab:
     @property
     def K(self) -> int:
         return self.cols.shape[0]
+
+    @property
+    def depth(self) -> int:
+        """Length of the intra-slab dependency chain (1 = plain level)."""
+        return len(self.sub_rows) if self.sub_rows else 1
+
+    def sub_slabs(self):
+        """Iterate the chain as plain (depth-1) :class:`LevelSlab` views —
+        consumers that need per-wavefront slabs (fused layout, replicated
+        distributed execution) remain agnostic to coarsening."""
+        if self.depth == 1:
+            yield dataclasses.replace(self, sub_rows=())
+            return
+        off = 0
+        for r in self.sub_rows:
+            yield LevelSlab(
+                rows=self.rows[off : off + r],
+                cols=self.cols[:, off : off + r],
+                vals=self.vals[:, off : off + r],
+                diag=self.diag[off : off + r],
+            )
+            off += r
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,10 +124,44 @@ class Schedule:
     def num_levels(self) -> int:
         return len(self.slabs)
 
-    def padded_flops(self) -> int:
+    @property
+    def num_segments(self) -> int:
+        """Barrier-separated execution units.  Every slab — coarsened or not
+        — is one segment: one generated code region, one kernel launch, one
+        collective.  This is the schedule's synchronization-point count."""
+        return len(self.slabs)
+
+    @property
+    def total_depth(self) -> int:
+        """Sum of intra-slab chain depths = wavefront count actually swept
+        (equals the level count of the uncoarsened schedule)."""
+        return sum(s.depth for s in self.slabs)
+
+    def padded_flops(self, unroll_threshold: int = 0) -> int:
         """FLOPs actually executed including padding waste (load-balance
-        metric — the TPU analogue of idle cores)."""
-        return sum(2 * s.K * s.R + s.R for s in self.slabs)
+        metric — the TPU analogue of idle cores).
+
+        ``unroll_threshold``: plain slabs with that few rows execute as
+        constant-embedded scalar code (``_apply_slab_unrolled``) which skips
+        zero padding entirely, so they count at their true nnz — without this
+        the ``auto`` planner would charge unrolled thin levels for padding
+        they never execute.  Coarsened slabs execute ``depth`` uniform
+        sub-steps padded to the widest sub-slab."""
+        return sum(slab_padded_flops(s, unroll_threshold) for s in self.slabs)
+
+
+def slab_padded_flops(s: LevelSlab, unroll_threshold: int = 0) -> int:
+    """Executed FLOPs of one slab as the executors actually run it: chains
+    do ``depth`` uniform sub-steps padded to the widest sub-slab, unrolled
+    slabs skip zero padding (true nnz), plain slabs pay the full ELL pad.
+    The single source of the per-slab cost — both ``Schedule.padded_flops``
+    and the coarsening/planner cost model sum this."""
+    if s.depth > 1:
+        rmax = max(s.sub_rows)
+        return s.depth * (2 * s.K * rmax + rmax)
+    if s.R <= unroll_threshold:
+        return 2 * int(np.count_nonzero(s.vals)) + s.R
+    return 2 * s.K * s.R + s.R
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,6 +410,52 @@ def _apply_slab_unrolled(x: jnp.ndarray, b: jnp.ndarray, slab: LevelSlab) -> jnp
     return x.at[rows].set(jnp.stack(new_vals).astype(x.dtype))
 
 
+def stack_sub_slabs(slab: LevelSlab, n: int):
+    """Uniform stacked arrays for a coarsened slab's chain: every sub-slab
+    zero-padded to the widest one so the chain can run as ONE ``fori_loop``
+    (one XLA while op — segment count and program size independent of depth).
+
+    Returns ``(rows, cols, vals, diag)`` of shapes ``(d, Rmax)``,
+    ``(d, K, Rmax)``, ``(d, K, Rmax)``, ``(d, Rmax)``.  Padding rows carry
+    the sentinel id ``n`` (they read ``b_ext[n] = 0``, divide by diag 1, and
+    scatter into the scratch slot ``n`` — never read back, masked off at the
+    end of the solve)."""
+    d = slab.depth
+    rmax = max(slab.sub_rows) if slab.sub_rows else slab.R
+    rows = np.full((d, rmax), n, dtype=np.int32)
+    cols = np.zeros((d, slab.K, rmax), dtype=np.int32)
+    vals = np.zeros((d, slab.K, rmax), dtype=slab.vals.dtype)
+    diag = np.ones((d, rmax), dtype=slab.diag.dtype)
+    for t, sub in enumerate(slab.sub_slabs()):
+        rows[t, : sub.R] = sub.rows
+        cols[t, :, : sub.R] = sub.cols
+        vals[t, :, : sub.R] = sub.vals
+        diag[t, : sub.R] = sub.diag
+    return rows, cols, vals, diag
+
+
+def _apply_slab_chain(
+    x: jnp.ndarray, b_ext: jnp.ndarray, slab: LevelSlab, n: int
+) -> jnp.ndarray:
+    """A coarsened slab: ``depth`` dependent sub-slabs executed back-to-back
+    inside one segment — a single ``fori_loop`` over the stacked uniform
+    sub-arrays, so the XLA program holds one gather/FMA/scatter body per
+    *super*-level instead of one per level.  ``x`` is ``(n+1, [m])`` with the
+    scratch slot last; ``b_ext`` is b with a zero appended."""
+    rows_h, cols_h, vals_h, diag_h = stack_sub_slabs(slab, n)
+    rows_s = jnp.asarray(rows_h)
+    cols_s = jnp.asarray(cols_h)
+    vals_s = jnp.asarray(vals_h, dtype=x.dtype)
+    diag_s = jnp.asarray(diag_h, dtype=x.dtype)
+
+    def body(t, xc):
+        s = _gather_sum(vals_s[t], cols_s[t], xc)
+        xl = (b_ext[rows_s[t]] - s) / _coef(diag_s[t], xc)
+        return xc.at[rows_s[t]].set(xl)
+
+    return jax.lax.fori_loop(0, slab.depth, body, x)
+
+
 def make_levelset_solver(
     schedule: Schedule,
     *,
@@ -351,16 +464,30 @@ def make_levelset_solver(
     """Level-set executor: one generated segment per level (paper's
     function-per-level), executed in level order.  ``unroll_threshold`` > 0
     additionally unrolls levels with that few rows into constant-embedded
-    scalar code.  ``b`` may be ``(n,)`` or ``(n, m)``."""
+    scalar code.  ``b`` may be ``(n,)`` or ``(n, m)``.
+
+    Coarsened slabs (``depth > 1``, see :mod:`repro.core.coarsen`) execute
+    their sub-slab chain as one ``fori_loop`` segment; the solution vector
+    gains a scratch slot ``n`` for their pad rows (sliced off on return).
+    Chained slabs are never unrolled — their rows are not mutually
+    independent."""
+    n = schedule.n
+    chained = any(s.depth > 1 for s in schedule.slabs)
 
     def solve(b: jnp.ndarray) -> jnp.ndarray:
-        x = jnp.zeros((schedule.n,) + b.shape[1:], dtype=b.dtype)
+        ext = 1 if chained else 0
+        x = jnp.zeros((n + ext,) + b.shape[1:], dtype=b.dtype)
+        if chained:
+            b_ext = jnp.concatenate(
+                [b, jnp.zeros((1,) + b.shape[1:], dtype=b.dtype)])
         for slab in schedule.slabs:
-            if slab.R <= unroll_threshold:
+            if slab.depth > 1:
+                x = _apply_slab_chain(x, b_ext, slab, n)
+            elif slab.R <= unroll_threshold:
                 x = _apply_slab_unrolled(x, b, slab)
             else:
                 x = _apply_slab(x, b, slab)
-        return x
+        return x[:n] if chained else x
 
     return solve
 

@@ -1,29 +1,43 @@
 """Distributed SpTRSV over a mesh axis (beyond-paper, required at scale).
 
-Rows of each level are sharded across the ``data`` axis with ``shard_map``.
-After a level solves its rows, the newly computed ``x`` entries are exchanged.
-On a pod, **each level boundary is one collective** — the direct analogue of
-the paper's per-level CPU barrier.  Equation rewriting reduces the number of
-levels and therefore the number of collectives; §Perf of EXPERIMENTS.md
-measures exactly this.
+Rows of each segment are sharded across the ``data`` axis with ``shard_map``.
+After a segment solves its rows, the newly computed ``x`` entries are
+exchanged.  On a pod, **each segment boundary is one collective** — the
+direct analogue of the paper's per-level CPU barrier.  Equation rewriting
+reduces the number of levels and schedule coarsening merges the survivors,
+so both shrink the collective count; §Perf of EXPERIMENTS.md measures
+exactly this.
 
 Two exchange strategies (hillclimb pair):
 
 * ``psum``       — naive: every device scatters its solved rows into an
                    n-vector of zeros and a full ``psum`` combines them.
-                   Bytes/level = O(n).  Paper-faithful port of "barrier".
+                   Bytes/segment = O(n).  Paper-faithful port of "barrier".
 * ``all_gather`` — each device contributes only its R/ndev solved values;
-                   bytes/level = O(R_level).  The optimized schedule.
+                   bytes/segment = O(R_segment).  The optimized schedule.
+
+Row ids are static host-known constants, so only solved *values* ever move
+on the wire: the full row order each device needs after the exchange is
+precomputed host-side in :func:`shard_schedule` (a ring ``all_gather(tiled)``
+of contiguous row shards reproduces the slab's own row array), and each
+device slices its shard out of the replicated constant with
+``lax.axis_index`` — there is no runtime collective over index arrays.
+
+Coarsened slabs (``depth > 1``, :mod:`repro.core.coarsen`) execute
+**replicated**: every device redundantly computes the whole intra-slab chain
+(thin levels are latency-bound, so the redundant FLOPs are noise) and the
+solution stays consistent on all devices with **zero** collectives for those
+slabs — a run of thin levels that used to cost one collective per level now
+costs none.
 
 Transpose solves (``SpTRSV.build(L, transpose=True, strategy="distributed")``)
 flow through unchanged: a backward :class:`Schedule` packs columns of L over
 the reverse level sets, and sharding/collectives are schedule-agnostic —
-the collective count equals the number of *backward* levels.
+the collective count equals the number of *sharded backward segments*.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, List
 
 import jax
@@ -32,37 +46,59 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
-from .codegen import Schedule, LevelSlab, _gather_sum
+from .codegen import Schedule, _gather_sum, stack_sub_slabs
 
 __all__ = ["DistributedSchedule", "shard_schedule", "make_distributed_solver"]
 
 
 @dataclasses.dataclass(frozen=True)
 class DistributedSchedule:
-    """Per-level slabs padded so the row dimension splits evenly over the
-    mesh axis.  Padding rows are no-ops (col 0 / val 0 / diag 1) writing to
-    the scratch slot ``n`` of the x vector (length n+1)."""
+    """Per-segment slabs.
+
+    Sharded segments are padded so the row dimension splits evenly over the
+    mesh axis; padding rows are no-ops (col 0 / val 0 / diag 1) writing to
+    the scratch slot ``n`` of the x vector (length n+1).  Replicated
+    segments (coarsened chains) hold the uniform *stacked* sub-slab arrays
+    of :func:`repro.core.codegen.stack_sub_slabs` — ``rows (d, Rmax)``,
+    ``cols/vals (d, K, Rmax)``, ``diag (d, Rmax)`` — executed as one
+    ``fori_loop`` per chain, same as the levelset/pallas executors, so the
+    traced program holds one body per chain rather than one per wavefront.
+    ``rows`` of a sharded segment is the **full** row order — the host-side
+    precomputed gather order; devices never exchange indices.
+    """
 
     n: int
     ndev: int
-    rows: List[np.ndarray]   # (R_pad,) per level, pad -> n (scratch slot)
-    cols: List[np.ndarray]   # (K, R_pad)
+    rows: List[np.ndarray]   # (R_pad,) sharded / (d, Rmax) replicated; pad -> n
+    cols: List[np.ndarray]   # (K, R_pad) sharded / (d, K, Rmax) replicated
     vals: List[np.ndarray]
     diag: List[np.ndarray]
+    replicated: List[bool]   # True: executed redundantly, no collective
 
     @property
     def num_levels(self) -> int:
         return len(self.rows)
 
+    @property
+    def num_collectives(self) -> int:
+        """Collectives per solve — sharded segments only (replicated chains
+        exchange nothing; row ids never move)."""
+        return sum(not r for r in self.replicated)
+
     def collective_bytes(self, itemsize: int = 4, strategy: str = "all_gather",
                          batch: int = 1) -> int:
         """Predicted on-wire bytes per solve (per device, ring all-gather):
-        the §Roofline collective term for the distributed solver.  A batched
-        solve multiplies the payload by ``batch`` but keeps the collective
-        *count* fixed — latency-bound thin levels amortize over columns."""
+        the §Roofline collective term for the distributed solver.  Counts
+        what actually moves: solved values of *sharded* segments only —
+        replicated segments exchange nothing, and row ids are static
+        host-side constants (they used to ride an extra runtime
+        ``all_gather`` per level).  A batched solve multiplies the payload
+        by ``batch`` but keeps the collective *count* fixed — latency-bound
+        thin levels amortize over columns."""
         if strategy == "psum":
-            return self.num_levels * 2 * (self.n + 1) * batch * itemsize
-        return sum(r.size * batch * itemsize for r in self.rows)
+            return self.num_collectives * 2 * (self.n + 1) * batch * itemsize
+        return sum(r.size * batch * itemsize
+                   for r, rep in zip(self.rows, self.replicated) if not rep)
 
 
 def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
@@ -74,15 +110,27 @@ def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
 
 
 def shard_schedule(schedule: Schedule, ndev: int) -> DistributedSchedule:
-    rows, cols, vals, diag = [], [], [], []
+    rows, cols, vals, diag, replicated = [], [], [], [], []
     for slab in schedule.slabs:
+        if slab.depth > 1:
+            # coarsened chain: replicated execution (stacked uniform
+            # sub-slabs, fori_loop'd per device), no exchange
+            r_s, c_s, v_s, d_s = stack_sub_slabs(slab, schedule.n)
+            rows.append(r_s)
+            cols.append(c_s)
+            vals.append(v_s)
+            diag.append(d_s)
+            replicated.append(True)
+            continue
         rpad = int(np.ceil(slab.R / ndev) * ndev)
         rows.append(_pad_to(slab.rows.astype(np.int32), rpad, schedule.n))
         cols.append(_pad_to(slab.cols, rpad, 0))
         vals.append(_pad_to(slab.vals, rpad, 0.0))
         diag.append(_pad_to(slab.diag, rpad, 1.0))
+        replicated.append(False)
     return DistributedSchedule(
-        n=schedule.n, ndev=ndev, rows=rows, cols=cols, vals=vals, diag=diag
+        n=schedule.n, ndev=ndev, rows=rows, cols=cols, vals=vals, diag=diag,
+        replicated=replicated,
     )
 
 
@@ -95,30 +143,38 @@ def make_distributed_solver(
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Build a jit-able distributed level-set solve(b) over ``mesh[axis]``.
 
-    x is replicated (n+1, scratch slot last); per level each device solves an
-    R/ndev shard of rows and the solved values are exchanged.
+    x is replicated (n+1, scratch slot last); per sharded segment each
+    device solves an R/ndev shard of rows and the solved values are
+    exchanged — values only: the device's row shard is a static slice
+    (``lax.axis_index``) of the replicated host-precomputed row order, and
+    the post-exchange scatter uses that same constant, so the index
+    ``all_gather`` that used to run every level of every solve is gone.
+    Replicated (coarsened) segments run their whole chain on every device
+    with no collective at all.
 
     ``b`` may be ``(n,)`` or batched ``(n, m)``: the batch axis rides through
     the shard_map region unsharded (columns are independent systems), so the
-    per-level collective moves ``R * m`` values instead of ``R`` — the
+    per-segment collective moves ``R * m`` values instead of ``R`` — the
     collective *count* (the paper's barrier analogue) is unchanged while the
     per-solve payload amortizes over the batch.
     """
     assert strategy in ("all_gather", "psum")
     n = dsched.n
     ndev = dsched.ndev
-    # Per-level constants, device-side. Row-shard the slabs over the axis.
+    # Per-segment constants, device-side.  Sharded segments split their slabs
+    # over the axis; rows stay replicated everywhere (static gather order).
     cols_d = [jnp.asarray(c) for c in dsched.cols]
     vals_d = [jnp.asarray(v) for v in dsched.vals]
     diag_d = [jnp.asarray(d) for d in dsched.diag]
     rows_d = [jnp.asarray(r) for r in dsched.rows]
+    rep = list(dsched.replicated)
 
     in_specs = (
         P(),  # b (replicated)
-        [P(None, axis)] * dsched.num_levels,  # cols (K, R)
-        [P(None, axis)] * dsched.num_levels,  # vals
-        [P(axis)] * dsched.num_levels,        # diag
-        [P(axis)] * dsched.num_levels,        # rows
+        [P() if r else P(None, axis) for r in rep],  # cols (K, R)
+        [P() if r else P(None, axis) for r in rep],  # vals
+        [P() if r else P(axis) for r in rep],        # diag
+        [P()] * dsched.num_levels,                   # rows: always replicated
     )
 
     def _solve(b, cols, vals, diag, rows):
@@ -126,19 +182,36 @@ def make_distributed_solver(
         batched = b.ndim == 2
         bx = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])  # scratch
         x = jnp.zeros((n + 1,) + b.shape[1:], dt)
+        me = jax.lax.axis_index(axis)
         for lv in range(len(cols)):
             v = vals[lv].astype(dt)
             d = diag[lv].astype(dt)
+            if rep[lv]:
+                # coarsened chain, replicated on every device: one fori_loop
+                # over the stacked sub-slabs (deterministic => consistent x,
+                # no exchange; pad rows write the scratch slot n) — the
+                # traced program holds one body per chain, not one per level
+                def chain_body(t, xc, _r=rows[lv], _c=cols[lv], _v=v, _d=d):
+                    d_t = _d[t][:, None] if batched else _d[t]
+                    s = _gather_sum(_v[t], _c[t], xc)
+                    return xc.at[_r[t]].set((bx[_r[t]] - s) / d_t)
+
+                x = jax.lax.fori_loop(0, rows[lv].shape[0], chain_body, x)
+                x = x.at[n].set(0.0)
+                continue
             if batched:
                 d = d[:, None]
+            shard = rows[lv].shape[0] // ndev
+            rows_me = jax.lax.dynamic_slice_in_dim(rows[lv], me * shard, shard)
             s = _gather_sum(v, cols[lv], x)             # (R/ndev[, m])
-            xl = (bx[rows[lv]] - s) / d
+            xl = (bx[rows_me] - s) / d
             if strategy == "all_gather":
+                # values only; the gathered row order is the replicated
+                # constant rows[lv] (host-precomputed)
                 xg = jax.lax.all_gather(xl, axis, tiled=True)        # (R[, m])
-                rg = jax.lax.all_gather(rows[lv], axis, tiled=True)  # (R,)
-                x = x.at[rg].set(xg)
+                x = x.at[rows[lv]].set(xg)
             else:  # psum: full-vector exchange — the naive barrier port
-                contrib = jnp.zeros_like(x).at[rows[lv]].set(xl)
+                contrib = jnp.zeros_like(x).at[rows_me].set(xl)
                 x = x + jax.lax.psum(contrib, axis)
             x = x.at[n].set(0.0)  # clear pad-row scratch writes
         return x[:n]

@@ -24,21 +24,58 @@ __all__ = [
 ]
 
 
-def compute_levels(L: CSRMatrix) -> np.ndarray:
-    """Level of each row. O(nnz) single pass (rows are topologically ordered
-    in a lower-triangular matrix)."""
-    n = L.n
+def _propagate_levels(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Longest-path layering of the DAG with edges ``src -> dst``, fully
+    vectorized per wavefront (one ``maximum.at`` scatter per level).
+
+    Each edge is touched exactly once across all wavefronts, so the total
+    work is O(nnz + n) numpy ops — the analysis phase stops being bound by a
+    per-row Python loop (arXiv:1710.04985's point: analysis must be cheap for
+    specialization economics to hold).  The number of Python iterations
+    equals the number of levels, but each is a handful of array ops.
+    """
     level = np.zeros(n, dtype=np.int64)
-    indptr, indices = L.indptr, L.indices
-    for i in range(n):
-        lo, hi = indptr[i], indptr[i + 1]
-        cols = indices[lo:hi]
-        # off-diagonal dependencies only
-        if hi - lo > 1:
-            deps = cols[cols < i]
-            if deps.size:
-                level[i] = level[deps].max() + 1
+    if src.size == 0:
+        return level
+    indeg = np.bincount(dst, minlength=n)
+    # group edges by source (CSR-of-the-edge-list): out-edges of one node
+    # are contiguous in dst_sorted
+    cnt_src = np.bincount(src, minlength=n)
+    outptr = np.concatenate([[0], np.cumsum(cnt_src)])
+    dst_sorted = dst[np.argsort(src, kind="stable")]
+    frontier = np.nonzero(indeg == 0)[0]
+    while frontier.size:
+        starts = outptr[frontier]
+        cnt = outptr[frontier + 1] - starts
+        total = int(cnt.sum())
+        if total == 0:
+            break
+        off = np.cumsum(cnt) - cnt
+        pos = np.repeat(starts - off, cnt) + np.arange(total)
+        targets = dst_sorted[pos]
+        np.maximum.at(level, targets, np.repeat(level[frontier] + 1, cnt))
+        np.subtract.at(indeg, targets, 1)
+        # a target may appear several times in this wavefront's edge list —
+        # dedupe before it becomes a frontier node
+        frontier = np.unique(targets[indeg[targets] == 0])
     return level
+
+
+def _edge_arrays(M: CSRMatrix, *, upper: bool) -> tuple[np.ndarray, np.ndarray]:
+    """Dependency edges ``src -> dst`` of the substitution DAG: for a lower
+    matrix row ``i`` depends on cols ``j < i`` (edge j -> i); for an upper
+    matrix on cols ``j > i``."""
+    row_of = np.repeat(np.arange(M.n, dtype=np.int64), M.row_nnz())
+    mask = (M.indices > row_of) if upper else (M.indices < row_of)
+    return M.indices[mask], row_of[mask]
+
+
+def compute_levels(L: CSRMatrix) -> np.ndarray:
+    """Level of each row of a lower-triangular matrix: ``1 + max`` over
+    off-diagonal dependencies.  Vectorized per wavefront — O(nnz) total, no
+    per-row Python loop (see :func:`_propagate_levels`)."""
+    src, dst = _edge_arrays(L, upper=False)
+    return _propagate_levels(L.n, src, dst)
 
 
 def compute_reverse_levels(
@@ -58,13 +95,13 @@ def compute_reverse_levels(
     vectorized ``maximum.at`` per forward wavefront, highest level first
     (every edge ``j -> i`` has ``level(j) < level(i)``, so by the time level
     ``lv`` is swept all consumers of its rows are settled).  This is the
-    shared-analysis fast path — the per-row python loop only remains as the
-    fallback when no forward analysis exists.
+    shared-analysis fast path; without a forward analysis the same
+    vectorized wavefront propagation runs on the reversed edge list.
     """
     n = L.n
-    rlevel = np.zeros(n, dtype=np.int64)
-    indptr, indices = L.indptr, L.indices
     if forward is not None:
+        rlevel = np.zeros(n, dtype=np.int64)
+        indptr, indices = L.indptr, L.indices
         for rows in reversed(forward.rows):
             starts = indptr[rows]
             cnt = indptr[rows + 1] - starts
@@ -78,32 +115,20 @@ def compute_reverse_levels(
             np.maximum.at(
                 rlevel, cols[mask], np.repeat(rlevel[rows] + 1, cnt)[mask])
         return rlevel
-    for i in range(n - 1, -1, -1):
-        lo, hi = indptr[i], indptr[i + 1]
-        if hi - lo > 1:
-            cols = indices[lo:hi]
-            deps = cols[cols < i]
-            if deps.size:
-                np.maximum.at(rlevel, deps, rlevel[i] + 1)
-    return rlevel
+    # no forward analysis: the reversed DAG has edges i -> j for every
+    # off-diagonal L[i, j] — same vectorized wavefront propagation
+    src, dst = _edge_arrays(L, upper=False)
+    return _propagate_levels(n, dst, src)
 
 
 def compute_upper_levels(U: CSRMatrix) -> np.ndarray:
     """Levels of the backward-substitution DAG of an *upper*-triangular CSR
     (row ``i`` depends on columns ``j > i``).  ``compute_upper_levels(L.transpose())``
-    equals :func:`compute_reverse_levels(L)`; this gather form exists for
-    matrices that are only available in upper form (e.g. a rewritten Lᵀ)."""
-    n = U.n
-    level = np.zeros(n, dtype=np.int64)
-    indptr, indices = U.indptr, U.indices
-    for i in range(n - 1, -1, -1):
-        lo, hi = indptr[i], indptr[i + 1]
-        if hi - lo > 1:
-            cols = indices[lo:hi]
-            deps = cols[cols > i]
-            if deps.size:
-                level[i] = level[deps].max() + 1
-    return level
+    equals :func:`compute_reverse_levels(L)`; this form exists for matrices
+    that are only available in upper form (e.g. a rewritten Lᵀ).  Vectorized
+    per wavefront like :func:`compute_levels`."""
+    src, dst = _edge_arrays(U, upper=True)
+    return _propagate_levels(U.n, src, dst)
 
 
 @dataclasses.dataclass(frozen=True)

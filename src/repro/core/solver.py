@@ -23,16 +23,18 @@ ELL slabs every executor/kernel already consumes.
 
 Strategy × capability matrix
 ----------------------------
-=================  ==========  =========  =========  =========  ============
-strategy           single RHS  batched    rewrite    transpose  distributed
-=================  ==========  =========  =========  =========  ============
-serial             yes         yes        yes        yes        no
-levelset           yes         yes        yes        yes        no
-levelset_unroll    yes         yes        yes        yes        no
-pallas_level       yes         yes        yes        yes        no
-pallas_fused       yes         yes        yes        yes        no
-distributed        yes         yes        yes        yes        yes (mesh axis)
-=================  ==========  =========  =========  =========  ============
+=================  ==========  =========  =========  =========  =========  ============
+strategy           single RHS  batched    rewrite    transpose  coarsen    distributed
+=================  ==========  =========  =========  =========  =========  ============
+serial             yes         yes        yes        yes        n/a        no
+levelset           yes         yes        yes        yes        yes        no
+levelset_unroll    yes         yes        yes        yes        yes        no
+pallas_level       yes         yes        yes        yes        yes        no
+pallas_fused       yes         yes        yes        yes        n/a (1 seg) no
+distributed        yes         yes        yes        yes        yes        yes (mesh axis)
+auto               planner: picks serial / levelset / levelset_unroll /
+                   pallas_fused from the analysis + schedule cost model
+=================  ==========  =========  =========  =========  =========  ============
 
 Strategies
 ----------
@@ -42,8 +44,27 @@ Strategies
 ``pallas_level``   per-level Pallas TPU kernel (kernels/sptrsv_level)
 ``pallas_fused``   whole solve in one Pallas kernel, x in VMEM (beyond-paper)
 ``distributed``    shard_map level solve over a mesh axis (one collective
-                   per level — rewriting reduces collective count; a batch
-                   multiplies collective payload, not count)
+                   per *segment* — rewriting and coarsening both reduce
+                   collective count; a batch multiplies collective payload,
+                   not count)
+``auto``           cost-model planner (:func:`repro.core.coarsen.plan_strategy`):
+                   serial for chain-like DAGs, (coarsened) level-set
+                   executors for wavefront-parallel matrices, the fused
+                   Pallas kernel for VMEM-sized systems on a real TPU.  The
+                   decision is recorded on ``solver.plan``.
+
+Schedule coarsening (``coarsen=...``)
+-------------------------------------
+``coarsen=True`` (or a :class:`~repro.core.coarsen.CoarsenConfig`) merges
+adjacent levels into super-level slabs under a launch-vs-padding cost model:
+a lung2-class schedule drops from ~478 segments (sync points) to a few
+dozen, with each merged slab executing its intra-slab dependency chain
+back-to-back inside one segment.  Every row is computed from exactly the
+same operands as uncoarsened (only zero padding is added), so results are
+typically bit-identical and always within a few ulp — XLA may re-contract
+the padded reduction (FMA/tree shape) when it recompiles the merged
+segment.  ``strategy="auto"`` enables coarsening whenever the cost model
+says it pays.
 
 Batched quickstart (PCG with many right-hand sides)::
 
@@ -68,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .analysis import MatrixAnalysis, analyze
+from .coarsen import CoarsenConfig, PlanDecision, coarsen_schedule, plan_strategy
 from .codegen import (
     Schedule,
     build_schedule,
@@ -88,7 +110,19 @@ STRATEGIES = (
     "pallas_level",
     "pallas_fused",
     "distributed",
+    "auto",
 )
+
+
+def _as_coarsen_config(coarsen) -> Optional[CoarsenConfig]:
+    """Normalize the ``coarsen`` build knob: None/False → off, True → default
+    config, a CoarsenConfig → itself."""
+    if coarsen is None or coarsen is False:
+        return None
+    if coarsen is True:
+        return CoarsenConfig()
+    assert isinstance(coarsen, CoarsenConfig), coarsen
+    return coarsen
 
 
 @dataclasses.dataclass
@@ -107,6 +141,7 @@ class SpTRSV:
     _solve_fn: Callable[[jnp.ndarray], jnp.ndarray]
     _rhs_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]]
     transpose: bool = False
+    plan: Optional[PlanDecision] = None   # set when strategy="auto" planned
 
     @staticmethod
     def build(
@@ -117,6 +152,7 @@ class SpTRSV:
         rewrite: Optional[RewriteConfig] = None,
         unroll_threshold: int = 4,
         bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
+        coarsen=None,                    # True / CoarsenConfig: merge levels
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -124,7 +160,14 @@ class SpTRSV:
         jit: bool = True,
     ) -> "SpTRSV":
         """Build a solver for ``L x = b`` (or ``Lᵀ x = b`` with
-        ``transpose=True``).  ``L`` is always the lower-triangular factor."""
+        ``transpose=True``).  ``L`` is always the lower-triangular factor.
+
+        ``coarsen`` merges adjacent levels into super-level slabs under the
+        :mod:`repro.core.coarsen` cost model (fewer segments / sync points;
+        consumed by the levelset, pallas_level and distributed executors —
+        serial has no segments and pallas_fused is already one segment).
+        ``strategy="auto"`` lets the planner pick both the strategy and
+        whether coarsening pays; the decision lands on ``solver.plan``."""
         assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
         if transpose:
             system, levels = L.transpose(), build_reverse_level_sets(L)
@@ -135,6 +178,7 @@ class SpTRSV:
             strategy=strategy, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio,
+            coarsen=coarsen,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             interpret=interpret, jit=jit,
         )
@@ -171,6 +215,7 @@ class SpTRSV:
         rewrite: Optional[RewriteConfig] = None,
         unroll_threshold: int = 4,
         bucket_pad_ratio: float = 0.0,
+        coarsen=None,
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -182,6 +227,7 @@ class SpTRSV:
         level sets already analyzed."""
         assert strategy in STRATEGIES, strategy
         analysis = analyze(system, levels)
+        ccfg = _as_coarsen_config(coarsen)
 
         rres: Optional[RewriteResult] = None
         rhs_fn = None
@@ -191,12 +237,50 @@ class SpTRSV:
             rhs_fn = make_rhs_transform(rres)
             target, target_levels = rres.L, rres.levels
 
+        _memo: dict = {}
+
+        def _schedule() -> Schedule:
+            # every schedule-consuming strategy gets the bucketed slab split
+            # (bucket_pad_ratio was silently dropped for pallas_*/distributed
+            # before — schedules are executor-agnostic)
+            if "base" not in _memo:
+                _memo["base"] = build_schedule(
+                    target, target_levels, upper=upper,
+                    bucket_pad_ratio=bucket_pad_ratio)
+            return _memo["base"]
+
+        def _coarsened(cfg: CoarsenConfig) -> Schedule:
+            if "coarse" not in _memo:
+                _memo["coarse"] = coarsen_schedule(
+                    _schedule(), cfg, unroll_threshold=unroll_threshold)
+            return _memo["coarse"]
+
+        plan: Optional[PlanDecision] = None
+        if strategy == "auto":
+            # let the planner weigh coarsening unless explicitly disabled
+            plan_ccfg = ccfg if ccfg is not None else (
+                None if coarsen is False else CoarsenConfig())
+            plan = plan_strategy(
+                analysis, _schedule(),
+                _coarsened(plan_ccfg) if plan_ccfg is not None else None,
+                unroll_threshold=unroll_threshold, interpret=interpret)
+            strategy = plan.strategy
+            if ccfg is not None and strategy in ("levelset", "levelset_unroll"):
+                # an explicit coarsen config is a user directive — coarsening
+                # stays on even if the planner costed it out; record what
+                # actually executes so solver.plan stays auditable
+                plan = dataclasses.replace(plan, coarsen=True)
+            elif plan.coarsen:
+                ccfg = plan_ccfg
+
+        def _maybe_coarsen(schedule: Schedule) -> Schedule:
+            return _coarsened(ccfg) if ccfg is not None else schedule
+
         schedule: Optional[Schedule] = None
         if strategy == "serial":
             fn = make_serial_solver(target, upper=upper)
         elif strategy in ("levelset", "levelset_unroll"):
-            schedule = build_schedule(target, target_levels, upper=upper,
-                                      bucket_pad_ratio=bucket_pad_ratio)
+            schedule = _maybe_coarsen(_schedule())
             fn = make_levelset_solver(
                 schedule,
                 unroll_threshold=unroll_threshold if strategy == "levelset_unroll" else 0,
@@ -204,18 +288,20 @@ class SpTRSV:
         elif strategy == "pallas_level":
             from repro.kernels.sptrsv_level import ops as level_ops
 
-            schedule = build_schedule(target, target_levels, upper=upper)
+            schedule = _maybe_coarsen(_schedule())
             fn = level_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "pallas_fused":
             from repro.kernels.sptrsv_fused import ops as fused_ops
 
-            schedule = build_schedule(target, target_levels, upper=upper)
+            # fused is already a single segment; coarsening would only
+            # re-partition its chunk walk, so the layout consumes sub-slabs
+            schedule = _schedule()
             fn = fused_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "distributed":
             from .dist import make_distributed_solver, shard_schedule
 
             assert mesh is not None, "distributed strategy needs a mesh"
-            schedule = build_schedule(target, target_levels, upper=upper)
+            schedule = _maybe_coarsen(_schedule())
             ndev = int(np.prod([mesh.shape[a] for a in (mesh_axis,)]))
             dsched = shard_schedule(schedule, ndev)
             fn = make_distributed_solver(dsched, mesh, mesh_axis, strategy=dist_strategy)
@@ -241,6 +327,7 @@ class SpTRSV:
             _solve_fn=solve_fn,
             _rhs_fn=rhs_fn,
             transpose=upper,
+            plan=plan,
         )
 
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:

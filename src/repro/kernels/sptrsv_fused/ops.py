@@ -47,27 +47,32 @@ class FusedLayout:
 
 def build_layout(schedule: Schedule, chunk: int = 512) -> FusedLayout:
     n = schedule.n
-    K = max(s.K for s in schedule.slabs)
-    # positions: levels in order, each padded to a chunk multiple
+    # A coarsened slab's sub-slabs are NOT mutually independent, so the
+    # chunk walk must keep every wavefront in its own chunk-aligned span —
+    # expand chains back to their sub-slabs (the fused solve is already a
+    # single segment; coarsening has nothing left to merge here).
+    slabs = [sub for slab in schedule.slabs for sub in slab.sub_slabs()]
+    K = max(s.K for s in slabs)
+    # positions: wavefronts in order, each padded to a chunk multiple
     spans = []
     off = 0
-    for slab in schedule.slabs:
+    for slab in slabs:
         r_pad = int(np.ceil(slab.R / chunk) * chunk)
         spans.append((off, r_pad))
         off += r_pad
     n_pad = off
     perm_rows = np.full((n_pad,), n, dtype=np.int32)
     pos = np.zeros((n + 1,), dtype=np.int64)
-    for (o, _), slab in zip(spans, schedule.slabs):
+    for (o, _), slab in zip(spans, slabs):
         perm_rows[o : o + slab.R] = slab.rows
         pos[slab.rows] = np.arange(o, o + slab.R)
     pos[n] = n_pad - 1  # scratch row maps to the last pad position
 
-    val_dtype = schedule.slabs[0].vals.dtype
+    val_dtype = slabs[0].vals.dtype
     cols = np.zeros((K, n_pad), dtype=np.int32)
     vals = np.zeros((K, n_pad), dtype=val_dtype)
     diag = np.ones((n_pad,), dtype=val_dtype)
-    for (o, _), slab in zip(spans, schedule.slabs):
+    for (o, _), slab in zip(spans, slabs):
         k = slab.K
         # remap dependency columns (original row ids) to positions
         cols[:k, o : o + slab.R] = pos[slab.cols]

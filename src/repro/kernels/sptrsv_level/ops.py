@@ -2,7 +2,13 @@
 
 Direction-agnostic: a backward (transpose) :class:`Schedule` — column-packed
 slabs over reverse level sets — runs through the same kernels; nothing here
-assumes which triangle the slabs came from."""
+assumes which triangle the slabs came from.
+
+Coarsened schedules (slabs with ``depth > 1``, :mod:`repro.core.coarsen`)
+execute the intra-slab chain as ONE ``fori_loop`` whose body launches the
+level kernel on a uniform stacked sub-slab — the XLA program holds one
+kernel call per *super*-level instead of one per level, so program size and
+trace/compile time stop scaling with the level count."""
 from __future__ import annotations
 
 from typing import Callable
@@ -11,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codegen import Schedule
+from repro.core.codegen import Schedule, stack_sub_slabs
 
 from .kernel import level_solve_blocks, level_solve_blocks_batched
 
@@ -25,25 +31,44 @@ def _ceil_to(v: int, m: int) -> int:
 def make_solver(
     schedule: Schedule, *, interpret: bool = True, block_rows: int = 512
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Build solve(b) that runs one Pallas kernel per level."""
+    """Build solve(b) that runs one Pallas kernel per segment (one per level,
+    or one per coarsened chain via ``fori_loop``)."""
     n = schedule.n
     n_pad = _ceil_to(n + 1, 128)
     packed = []
     for slab in schedule.slabs:
-        R_pad = _ceil_to(slab.R, block_rows if slab.R > block_rows // 4 else 128)
-        br = min(block_rows, R_pad)
-        rows = np.full((R_pad,), n, dtype=np.int32)
-        rows[: slab.R] = slab.rows
-        cols = np.zeros((slab.K, R_pad), np.int32)
-        cols[:, : slab.R] = slab.cols
-        # keep the matrix dtype — hard-coding f32 here would silently
-        # truncate f64 factors at pack time
-        vals = np.zeros((slab.K, R_pad), slab.vals.dtype)
-        vals[:, : slab.R] = slab.vals
-        diag = np.ones((R_pad,), slab.diag.dtype)
-        diag[: slab.R] = slab.diag
+        if slab.depth > 1:
+            # chain: stack sub-slabs to a uniform (d, K, R_pad) block so one
+            # fori_loop'd kernel call covers the whole segment
+            rows_s, cols_s, vals_s, diag_s = stack_sub_slabs(slab, n)
+            rmax = rows_s.shape[1]
+            R_pad = _ceil_to(rmax, block_rows if rmax > block_rows // 4 else 128)
+            br = min(block_rows, R_pad)
+            d = slab.depth
+            rows = np.full((d, R_pad), n, dtype=np.int32)
+            rows[:, :rmax] = rows_s
+            cols = np.zeros((d, slab.K, R_pad), np.int32)
+            cols[:, :, :rmax] = cols_s
+            vals = np.zeros((d, slab.K, R_pad), slab.vals.dtype)
+            vals[:, :, :rmax] = vals_s
+            diag = np.ones((d, R_pad), slab.diag.dtype)
+            diag[:, :rmax] = diag_s
+        else:
+            R_pad = _ceil_to(slab.R, block_rows if slab.R > block_rows // 4 else 128)
+            br = min(block_rows, R_pad)
+            rows = np.full((R_pad,), n, dtype=np.int32)
+            rows[: slab.R] = slab.rows
+            cols = np.zeros((slab.K, R_pad), np.int32)
+            cols[:, : slab.R] = slab.cols
+            # keep the matrix dtype — hard-coding f32 here would silently
+            # truncate f64 factors at pack time
+            vals = np.zeros((slab.K, R_pad), slab.vals.dtype)
+            vals[:, : slab.R] = slab.vals
+            diag = np.ones((R_pad,), slab.diag.dtype)
+            diag[: slab.R] = slab.diag
         packed.append(
             (
+                slab.depth,
                 jnp.asarray(rows),
                 jnp.asarray(cols),
                 jnp.asarray(vals),
@@ -58,14 +83,26 @@ def make_solver(
         kern = level_solve_blocks_batched if b.ndim == 2 else level_solve_blocks
         b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
         x = jnp.zeros((n_pad,) + b.shape[1:], dt)
-        for rows, cols, vals, diag, br in packed:
+
+        def step(x, rows, cols, vals, diag, br):
             bl = b_ext[jnp.minimum(rows, n)]
             xl = kern(
                 x, bl, cols, vals.astype(dt), diag.astype(dt),
                 block_rows=br, interpret=interpret,
             )
             x = x.at[rows].set(xl)
-            x = x.at[n].set(0.0)  # pad rows target the scratch slot
+            return x.at[n].set(0.0)  # pad rows target the scratch slot
+
+        for depth, rows, cols, vals, diag, br in packed:
+            if depth == 1:
+                x = step(x, rows, cols, vals, diag, br)
+            else:
+                x = jax.lax.fori_loop(
+                    0, depth,
+                    lambda t, xc, _r=rows, _c=cols, _v=vals, _d=diag, _br=br:
+                        step(xc, _r[t], _c[t], _v[t], _d[t], _br),
+                    x,
+                )
         return x[:n]
 
     return solve

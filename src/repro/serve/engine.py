@@ -167,6 +167,26 @@ class SolveEngine:
         self.batches = 0
         self._next_rid = 0
 
+    @classmethod
+    def from_matrix(cls, L, *, strategy: str = "auto", transpose_too: bool = True,
+                    max_batch: int = 64, bucket_base: int = 2, **build_kwargs):
+        """Stand up a serving engine straight from a factor.
+
+        Defaults to ``strategy="auto"`` — the cost-model planner picks the
+        executor (and whether to coarsen the schedule) per matrix, which is
+        the right default for a serving tier that sees arbitrary factors.
+        ``transpose_too=True`` builds the backward solver from the same
+        shared analysis (``SpTRSV.build_pair``) so transpose requests are
+        servable.  Extra keyword arguments (``rewrite=``, ``coarsen=``,
+        ``bucket_pad_ratio=``, ...) pass through to the builder."""
+        from repro.core import SpTRSV
+
+        if transpose_too:
+            fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, **build_kwargs)
+        else:
+            fwd, bwd = SpTRSV.build(L, strategy=strategy, **build_kwargs), None
+        return cls(fwd, bwd, max_batch=max_batch, bucket_base=bucket_base)
+
     def submit(self, b: np.ndarray, *, transpose: bool = False) -> SolveRequest:
         b = np.asarray(b)
         assert b.ndim == 1 and b.shape[0] == self.solver.n, b.shape
