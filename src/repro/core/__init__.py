@@ -10,8 +10,23 @@ from .levels import (
     compute_reverse_levels,
     compute_upper_levels,
 )
-from .rewrite import RewriteConfig, RewriteResult, RewriteStats, rewrite_matrix
+from .rewrite import (
+    RewriteConfig,
+    RewritePlan,
+    RewriteReplayError,
+    RewriteResult,
+    RewriteStats,
+    replay_rewrite_values,
+    rewrite_matrix,
+)
 from .codegen import Schedule, build_schedule, make_levelset_solver, make_serial_solver
+from .packed import (
+    PackedLayout,
+    PackedStats,
+    build_packed_layout,
+    make_packed_levelset_solver,
+    pack_values,
+)
 from .coarsen import (
     CoarsenConfig,
     CoarsenStats,
@@ -21,7 +36,7 @@ from .coarsen import (
     plan_strategy,
     schedule_cost,
 )
-from .solver import STRATEGIES, SpTRSV
+from .solver import LAYOUTS, STRATEGIES, SpTRSV
 
 __all__ = [
     "MatrixAnalysis",
@@ -37,9 +52,17 @@ __all__ = [
     "compute_reverse_levels",
     "compute_upper_levels",
     "RewriteConfig",
+    "RewritePlan",
+    "RewriteReplayError",
     "RewriteResult",
     "RewriteStats",
+    "replay_rewrite_values",
     "rewrite_matrix",
+    "PackedLayout",
+    "PackedStats",
+    "build_packed_layout",
+    "make_packed_levelset_solver",
+    "pack_values",
     "Schedule",
     "build_schedule",
     "make_levelset_solver",
@@ -51,6 +74,7 @@ __all__ = [
     "coarsen_stats",
     "plan_strategy",
     "schedule_cost",
+    "LAYOUTS",
     "STRATEGIES",
     "SpTRSV",
 ]

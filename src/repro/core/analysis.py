@@ -53,6 +53,18 @@ class MatrixAnalysis:
     def pretty(self) -> str:
         return "\n".join(f"{k:>28s}: {v}" for k, v in self.report().items())
 
+    def traffic_bytes(self, itemsize: int = 4, index_size: int = 4) -> Dict:
+        """Per-solve streaming-traffic floor implied by the analysis: matrix
+        values + column indices + the solution/RHS vectors, in bytes.  The
+        packed permuted layout approaches this floor (one flat value stream,
+        contiguous b̂/x̂ slices); ``SpTRSV.stats()`` reports the *actual*
+        packed-buffer bytes including padding for comparison."""
+        return {
+            "value_bytes": self.nnz * itemsize,
+            "index_bytes": self.nnz_offdiag * index_size,
+            "vector_bytes": 2 * self.n * itemsize,
+        }
+
 
 def analyze(L: CSRMatrix, levels: Optional[LevelSets] = None) -> MatrixAnalysis:
     if levels is None:

@@ -144,13 +144,20 @@ def _merge_group(group: list) -> LevelSlab:
     diag = np.concatenate([s.diag for s in group])
     cols = np.zeros((K, R), dtype=np.int32)
     vals = np.zeros((K, R), dtype=group[0].vals.dtype)
+    with_src = all(s.val_src is not None for s in group)
+    val_src = np.full((K, R), -1, dtype=np.int64) if with_src else None
+    diag_src = (np.concatenate([s.diag_src for s in group])
+                if with_src else None)
     off = 0
     for s in group:
         cols[: s.K, off : off + s.R] = s.cols
         vals[: s.K, off : off + s.R] = s.vals
+        if with_src:
+            val_src[: s.K, off : off + s.R] = s.val_src
         off += s.R
     return LevelSlab(rows=rows, cols=cols, vals=vals, diag=diag,
-                     sub_rows=tuple(s.R for s in group))
+                     sub_rows=tuple(s.R for s in group),
+                     val_src=val_src, diag_src=diag_src)
 
 
 def coarsen_schedule(

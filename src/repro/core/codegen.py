@@ -40,6 +40,7 @@ __all__ = [
     "build_ell",
     "slab_padded_flops",
     "stack_sub_slabs",
+    "serial_arrays",
     "make_serial_solver",
     "make_levelset_solver",
     "make_rhs_transform",
@@ -72,6 +73,12 @@ class LevelSlab:
     whole chain forms **one** segment: a single barrier/launch/collective
     covers all of it.  An empty tuple means the classic one-level slab (all
     rows mutually independent).
+
+    ``val_src``/``diag_src`` map each packed value back to its index in the
+    source matrix's ``data`` array (-1 for zero padding).  They are the
+    symbolic side of value-only numeric refresh (:meth:`SpTRSV.refresh`):
+    re-packing a slab for new values with the same sparsity pattern is one
+    vectorized gather instead of a re-analysis.
     """
 
     rows: np.ndarray
@@ -79,6 +86,8 @@ class LevelSlab:
     vals: np.ndarray
     diag: np.ndarray
     sub_rows: tuple = ()
+    val_src: Optional[np.ndarray] = None   # (K, R) int64, -1 = padding
+    diag_src: Optional[np.ndarray] = None  # (R,) int64
 
     @property
     def R(self) -> int:
@@ -107,6 +116,10 @@ class LevelSlab:
                 cols=self.cols[:, off : off + r],
                 vals=self.vals[:, off : off + r],
                 diag=self.diag[off : off + r],
+                val_src=None if self.val_src is None
+                else self.val_src[:, off : off + r],
+                diag_src=None if self.diag_src is None
+                else self.diag_src[off : off + r],
             )
             off += r
 
@@ -137,6 +150,24 @@ class Schedule:
         (equals the level count of the uncoarsened schedule)."""
         return sum(s.depth for s in self.slabs)
 
+    def perm(self) -> np.ndarray:
+        """Schedule-order row permutation: ``perm[p]`` = original row id at
+        permuted position ``p``.  Each segment's output rows are a
+        *contiguous* slice of the permuted space (see :func:`row_offsets`),
+        which is what lets the permuted-space executors replace per-segment
+        row scatters with ``lax.dynamic_update_slice``.  Concatenating slab
+        row arrays is exact because every row appears in exactly one slab
+        and slabs execute in this order."""
+        if not self.slabs:
+            return np.zeros(0, dtype=np.int64)
+        return np.concatenate([s.rows for s in self.slabs]).astype(np.int64)
+
+    def row_offsets(self) -> np.ndarray:
+        """(num_segments + 1,) permuted-space start offset of each segment:
+        segment ``i`` owns positions ``[row_offsets[i], row_offsets[i+1])``."""
+        return np.concatenate(
+            [[0], np.cumsum([s.R for s in self.slabs])]).astype(np.int64)
+
     def padded_flops(self, unroll_threshold: int = 0) -> int:
         """FLOPs actually executed including padding waste (load-balance
         metric — the TPU analogue of idle cores).
@@ -166,10 +197,15 @@ def slab_padded_flops(s: LevelSlab, unroll_threshold: int = 0) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class EllMatrix:
-    """Whole-matrix ELL (used for the RHS operator E and for SpMV)."""
+    """Whole-matrix ELL (used for the RHS operator E and for SpMV).
+
+    ``val_src`` (optional) maps each packed value to its index in the source
+    matrix's ``data`` array (-1 padding) — the refresh map for re-packing
+    new values of the same pattern in one vectorized gather."""
 
     cols: np.ndarray  # (K, n)
     vals: np.ndarray  # (K, n)
+    val_src: Optional[np.ndarray] = None  # (K, n) int64, -1 = padding
 
     @property
     def K(self) -> int:
@@ -197,18 +233,27 @@ def _pack_rows(
     cols = np.zeros((K, R), dtype=np.int32)
     vals = np.zeros((K, R), dtype=L.dtype)
     diag = np.empty((R,), dtype=L.dtype)
+    val_src = np.full((K, R), -1, dtype=np.int64)
+    diag_src = np.empty((R,), dtype=np.int64)
     for r, i in enumerate(rows):
-        c, v = L.row(int(i))
+        lo, hi = int(L.indptr[int(i)]), int(L.indptr[int(i) + 1])
+        c, v = L.indices[lo:hi], L.data[lo:hi]
         if diag_first:
             diag[r] = v[0]
+            diag_src[r] = lo
             c, v = c[1:], v[1:]
+            src = np.arange(lo + 1, hi, dtype=np.int64)
         else:
             diag[r] = v[-1]
+            diag_src[r] = hi - 1
             c, v = c[:-1], v[:-1]
+            src = np.arange(lo, hi - 1, dtype=np.int64)
         k = c.size
         cols[:k, r] = c
         vals[:k, r] = v
-    return LevelSlab(rows=rows.astype(np.int32), cols=cols, vals=vals, diag=diag)
+        val_src[:k, r] = src
+    return LevelSlab(rows=rows.astype(np.int32), cols=cols, vals=vals,
+                     diag=diag, val_src=val_src, diag_src=diag_src)
 
 
 def build_schedule(
@@ -260,16 +305,20 @@ def build_schedule(
 
 
 def build_ell(M: CSRMatrix) -> EllMatrix:
-    """Whole matrix (diagonal included) as ELL, transposed (K, n)."""
+    """Whole matrix (diagonal included) as ELL, transposed (K, n), with the
+    value-source map recorded for value-only refresh."""
     row_nnz = M.row_nnz()
     K = max(int(row_nnz.max()), 1)
     cols = np.zeros((K, M.n), dtype=np.int32)
     vals = np.zeros((K, M.n), dtype=M.dtype)
+    val_src = np.full((K, M.n), -1, dtype=np.int64)
     for i in range(M.n):
-        c, v = M.row(i)
-        cols[: c.size, i] = c
-        vals[: c.size, i] = v
-    return EllMatrix(cols=cols, vals=vals)
+        lo, hi = int(M.indptr[i]), int(M.indptr[i + 1])
+        k = hi - lo
+        cols[:k, i] = M.indices[lo:hi]
+        vals[:k, i] = M.data[lo:hi]
+        val_src[:k, i] = np.arange(lo, hi, dtype=np.int64)
+    return EllMatrix(cols=cols, vals=vals, val_src=val_src)
 
 
 # --------------------------------------------------------------------------
@@ -328,6 +377,39 @@ def ell_spmv(ell: EllMatrix, v: jnp.ndarray) -> jnp.ndarray:
     return _gather_sum(vals, cols, v)
 
 
+def serial_arrays(L: CSRMatrix, *, upper: bool = False):
+    """Row-major serial-scan arrays plus their refresh source maps.
+
+    Returns ``(cols (n, K), vals (n, K), diag (n,), val_src (n, K),
+    diag_src (n,), order (n,))`` — ``order`` is the scan order (reversed for
+    backward substitution).  ``val_src``/``diag_src`` index ``L.data``
+    (-1 = padding), so a value-only refresh re-packs the scan operands with
+    one vectorized gather."""
+    row_nnz = L.row_nnz() - 1
+    K = max(int(row_nnz.max()), 1)
+    n = L.n
+    cols = np.zeros((n, K), dtype=np.int32)
+    vals = np.zeros((n, K), dtype=L.dtype)
+    val_src = np.full((n, K), -1, dtype=np.int64)
+    for i in range(n):
+        lo, hi = int(L.indptr[i]), int(L.indptr[i + 1])
+        k = hi - lo - 1
+        if upper:
+            cols[i, :k] = L.indices[lo + 1 : hi]
+            vals[i, :k] = L.data[lo + 1 : hi]
+            val_src[i, :k] = np.arange(lo + 1, hi, dtype=np.int64)
+        else:
+            cols[i, :k] = L.indices[lo : hi - 1]
+            vals[i, :k] = L.data[lo : hi - 1]
+            val_src[i, :k] = np.arange(lo, hi - 1, dtype=np.int64)
+    diag = L.diagonal(first=upper)
+    diag_src = (L.indptr[:-1] if upper else L.indptr[1:] - 1).astype(np.int64)
+    order = np.arange(n, dtype=np.int32)
+    if upper:
+        order = order[::-1]
+    return cols, vals, diag, val_src, diag_src, order
+
+
 def make_serial_solver(
     L: CSRMatrix, *, upper: bool = False
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
@@ -338,24 +420,7 @@ def make_serial_solver(
     ``upper=True`` takes an upper-triangular matrix (diagonal first per row,
     e.g. ``L.transpose()``) and scans rows in *reverse* order — backward
     substitution for the transpose solve ``Lᵀ x = b``."""
-    row_nnz = L.row_nnz() - 1
-    K = max(int(row_nnz.max()), 1)
-    n = L.n
-    cols = np.zeros((n, K), dtype=np.int32)
-    vals = np.zeros((n, K), dtype=L.dtype)
-    for i in range(n):
-        c, v = L.row(i)
-        k = c.size - 1
-        if upper:
-            cols[i, :k] = c[1:]
-            vals[i, :k] = v[1:]
-        else:
-            cols[i, :k] = c[:-1]
-            vals[i, :k] = v[:-1]
-    diag = L.diagonal(first=upper)
-    order = np.arange(n, dtype=np.int32)
-    if upper:
-        order = order[::-1]
+    cols, vals, diag, _, _, order = serial_arrays(L, upper=upper)
     cols_d = jnp.asarray(cols[order])
     vals_d = jnp.asarray(vals[order])
     diag_d = jnp.asarray(diag[order])
@@ -380,14 +445,17 @@ def make_serial_solver(
     return solve
 
 
-def _apply_slab(x: jnp.ndarray, b: jnp.ndarray, slab: LevelSlab) -> jnp.ndarray:
+def _apply_slab(
+    x: jnp.ndarray, b: jnp.ndarray, slab: LevelSlab,
+    unroll_max_k: int = GATHER_UNROLL_MAX_K,
+) -> jnp.ndarray:
     """One level as a vectorized gather/FMA/reduce segment.  For batched
     solves the gather is ``(K, R, m)`` and the reduce yields ``(R, m)``."""
     cols = jnp.asarray(slab.cols)
     vals = jnp.asarray(slab.vals, dtype=x.dtype)
     rows = jnp.asarray(slab.rows)
     diag = jnp.asarray(slab.diag, dtype=x.dtype)
-    s = _gather_sum(vals, cols, x)  # (R,) or (R, m)
+    s = _gather_sum(vals, cols, x, unroll_max_k=unroll_max_k)  # (R,) or (R, m)
     xl = (b[rows] - s) / _coef(diag, x)
     return x.at[rows].set(xl)
 
@@ -410,7 +478,7 @@ def _apply_slab_unrolled(x: jnp.ndarray, b: jnp.ndarray, slab: LevelSlab) -> jnp
     return x.at[rows].set(jnp.stack(new_vals).astype(x.dtype))
 
 
-def stack_sub_slabs(slab: LevelSlab, n: int):
+def stack_sub_slabs(slab: LevelSlab, n: int, *, with_src: bool = False):
     """Uniform stacked arrays for a coarsened slab's chain: every sub-slab
     zero-padded to the widest one so the chain can run as ONE ``fori_loop``
     (one XLA while op — segment count and program size independent of depth).
@@ -419,23 +487,32 @@ def stack_sub_slabs(slab: LevelSlab, n: int):
     ``(d, K, Rmax)``, ``(d, K, Rmax)``, ``(d, Rmax)``.  Padding rows carry
     the sentinel id ``n`` (they read ``b_ext[n] = 0``, divide by diag 1, and
     scatter into the scratch slot ``n`` — never read back, masked off at the
-    end of the solve)."""
+    end of the solve).  ``with_src=True`` appends the stacked
+    ``(val_src, diag_src)`` refresh maps (-1 padding)."""
     d = slab.depth
     rmax = max(slab.sub_rows) if slab.sub_rows else slab.R
     rows = np.full((d, rmax), n, dtype=np.int32)
     cols = np.zeros((d, slab.K, rmax), dtype=np.int32)
     vals = np.zeros((d, slab.K, rmax), dtype=slab.vals.dtype)
     diag = np.ones((d, rmax), dtype=slab.diag.dtype)
+    val_src = np.full((d, slab.K, rmax), -1, dtype=np.int64)
+    diag_src = np.full((d, rmax), -1, dtype=np.int64)
     for t, sub in enumerate(slab.sub_slabs()):
         rows[t, : sub.R] = sub.rows
         cols[t, :, : sub.R] = sub.cols
         vals[t, :, : sub.R] = sub.vals
         diag[t, : sub.R] = sub.diag
+        if with_src and sub.val_src is not None:
+            val_src[t, :, : sub.R] = sub.val_src
+            diag_src[t, : sub.R] = sub.diag_src
+    if with_src:
+        return rows, cols, vals, diag, val_src, diag_src
     return rows, cols, vals, diag
 
 
 def _apply_slab_chain(
-    x: jnp.ndarray, b_ext: jnp.ndarray, slab: LevelSlab, n: int
+    x: jnp.ndarray, b_ext: jnp.ndarray, slab: LevelSlab, n: int,
+    unroll_max_k: int = GATHER_UNROLL_MAX_K,
 ) -> jnp.ndarray:
     """A coarsened slab: ``depth`` dependent sub-slabs executed back-to-back
     inside one segment — a single ``fori_loop`` over the stacked uniform
@@ -449,7 +526,7 @@ def _apply_slab_chain(
     diag_s = jnp.asarray(diag_h, dtype=x.dtype)
 
     def body(t, xc):
-        s = _gather_sum(vals_s[t], cols_s[t], xc)
+        s = _gather_sum(vals_s[t], cols_s[t], xc, unroll_max_k=unroll_max_k)
         xl = (b_ext[rows_s[t]] - s) / _coef(diag_s[t], xc)
         return xc.at[rows_s[t]].set(xl)
 
@@ -460,6 +537,7 @@ def make_levelset_solver(
     schedule: Schedule,
     *,
     unroll_threshold: int = 0,
+    gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Level-set executor: one generated segment per level (paper's
     function-per-level), executed in level order.  ``unroll_threshold`` > 0
@@ -470,7 +548,9 @@ def make_levelset_solver(
     their sub-slab chain as one ``fori_loop`` segment; the solution vector
     gains a scratch slot ``n`` for their pad rows (sliced off on return).
     Chained slabs are never unrolled — their rows are not mutually
-    independent."""
+    independent.  ``gather_unroll_max_k`` bounds the batched per-k gather
+    unrolling of :func:`_gather_sum` (wider slabs fall back to the fused
+    3-D gather, logged at trace time)."""
     n = schedule.n
     chained = any(s.depth > 1 for s in schedule.slabs)
 
@@ -482,11 +562,11 @@ def make_levelset_solver(
                 [b, jnp.zeros((1,) + b.shape[1:], dtype=b.dtype)])
         for slab in schedule.slabs:
             if slab.depth > 1:
-                x = _apply_slab_chain(x, b_ext, slab, n)
+                x = _apply_slab_chain(x, b_ext, slab, n, gather_unroll_max_k)
             elif slab.R <= unroll_threshold:
                 x = _apply_slab_unrolled(x, b, slab)
             else:
-                x = _apply_slab(x, b, slab)
+                x = _apply_slab(x, b, slab, gather_unroll_max_k)
         return x[:n] if chained else x
 
     return solve

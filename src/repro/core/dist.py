@@ -46,9 +46,16 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
-from .codegen import Schedule, _gather_sum, stack_sub_slabs
+from .codegen import GATHER_UNROLL_MAX_K, Schedule, _gather_sum, stack_sub_slabs
+from .packed import PackedLayout, build_packed_layout, pack_values
 
-__all__ = ["DistributedSchedule", "shard_schedule", "make_distributed_solver"]
+__all__ = [
+    "DistributedSchedule",
+    "shard_schedule",
+    "make_distributed_solver",
+    "build_packed_dist_layout",
+    "make_packed_distributed_solver",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,3 +235,154 @@ def make_distributed_solver(
         return fn(b, cols_d, vals_d, diag_d, rows_d)
 
     return solve
+
+
+# ==========================================================================
+# Permuted-space packed distributed solver (refresh-capable)
+# ==========================================================================
+def build_packed_dist_layout(schedule: Schedule, ndev: int) -> PackedLayout:
+    """Packed layout whose sharded segments are row-padded to a multiple of
+    the mesh axis size (chains execute replicated and need no alignment)."""
+    return build_packed_layout(
+        schedule,
+        pad_rows=lambda r: int(np.ceil(r / ndev) * ndev),
+        pad_chain_rows=lambda r: r,
+    )
+
+
+def make_packed_distributed_solver(
+    layout: PackedLayout,
+    mesh: Mesh,
+    axis: str = "data",
+    *,
+    strategy: str = "all_gather",
+    gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
+):
+    """Permuted-space distributed solve over ``mesh[axis]``.
+
+    Identical exchange structure to :func:`make_distributed_solver` — one
+    value ``all_gather`` (or ``psum``) per *sharded* segment, replicated
+    chains exchange nothing — but executed in permuted space: ``b`` is
+    permuted once on entry, each device solves a contiguous shard of its
+    segment's positions, and the gathered window lands with one
+    ``dynamic_update_slice`` at a static offset (the per-segment row-id
+    scatter and its replicated row-order constants are gone entirely).
+
+    Returns ``(solve(b, values), values0, repack)``: the per-segment value
+    arrays ride as runtime arguments, so ``SpTRSV.refresh`` swaps them
+    (via ``repack(new_target_data)``) without re-tracing the shard_map."""
+    assert strategy in ("all_gather", "psum")
+    n, n_pad = layout.n, layout.n_pad
+    ndev = int(np.prod([mesh.shape[a] for a in (axis,)]))
+    segs = layout.segments
+
+    def _seg_slices(flat, kind):
+        """Per-segment views of one flat buffer, honoring that buffer's own
+        offset field (``val_off``/``col_off``/``diag_off``)."""
+        out = []
+        for s in segs:
+            if kind == "diag":
+                a = flat[s.diag_off: s.diag_off + s.diag_size]
+                shape = (s.depth, s.R_pad) if s.kind == "chain" else (s.R_pad,)
+            else:
+                off = s.val_off if kind == "val" else s.col_off
+                a = flat[off: off + s.val_size]
+                shape = ((s.depth, s.K, s.R_pad) if s.kind == "chain"
+                         else (s.K, s.R_pad))
+            out.append(a.reshape(shape))
+        return out
+
+    def _seg_arrays(vals_flat, diag_flat):
+        return (_seg_slices(vals_flat, "val"), _seg_slices(diag_flat, "diag"))
+
+    vals_h, diag_h = _seg_arrays(layout.vals_flat, layout.diag_flat)
+    cols_d = tuple(jnp.asarray(c)
+                   for c in _seg_slices(layout.cols_flat, "col"))
+    values0 = (tuple(jnp.asarray(v) for v in vals_h),
+               tuple(jnp.asarray(d) for d in diag_h))
+    perm_d = jnp.asarray(layout.perm)
+    pos_d = jnp.asarray(layout.pos)
+
+    def repack(target_data: np.ndarray):
+        vf, df = pack_values(layout, target_data)
+        vs, ds = _seg_arrays(vf, df)
+        return (tuple(jnp.asarray(v) for v in vs),
+                tuple(jnp.asarray(d) for d in ds))
+
+    rep = [s.kind == "chain" for s in segs]
+    in_specs = (
+        P(),                                              # b (replicated)
+        P(),                                              # perm
+        P(),                                              # pos
+        tuple(P() if r else P(None, axis) for r in rep),  # vals
+        tuple(P() if r else P(axis) for r in rep),        # diag
+        tuple(P() if r else P(None, axis) for r in rep),  # cols (positions)
+    )
+
+    def _solve(b, perm, pos, vals_t, diag_t, cols_t):
+        dt = b.dtype
+        batched = b.ndim == 2
+        bhat = b[perm]
+        if n_pad > n:
+            bhat = jnp.concatenate(
+                [bhat, jnp.zeros((n_pad - n,) + b.shape[1:], dt)])
+        x = jnp.zeros((n_pad,) + b.shape[1:], dt)
+        me = jax.lax.axis_index(axis)
+        for i, seg in enumerate(segs):
+            v = vals_t[i].astype(dt)
+            d = diag_t[i].astype(dt)
+            c = cols_t[i]
+            if rep[i]:
+                # coarsened chain, replicated on every device: deterministic
+                # => consistent x, zero collectives (pad lanes write forward
+                # into positions their owners overwrite before any read)
+                sub = jnp.asarray(seg.sub_offs)
+                Rp = seg.R_pad
+
+                def chain_body(t, xc, _c=c, _v=v, _d=d, _sub=sub, _Rp=Rp):
+                    s = _gather_sum(_v[t], _c[t], xc,
+                                    unroll_max_k=gather_unroll_max_k)
+                    o = _sub[t]
+                    bw = jax.lax.dynamic_slice_in_dim(bhat, o, _Rp)
+                    dd = _d[t][:, None] if batched else _d[t]
+                    xl = (bw - s) / dd
+                    return jax.lax.dynamic_update_slice_in_dim(xc, xl, o, 0)
+
+                x = jax.lax.fori_loop(0, seg.depth, chain_body, x)
+                continue
+            shard = seg.R_pad // ndev
+            if batched:
+                d = d[:, None]
+            s = _gather_sum(v, c, x, unroll_max_k=gather_unroll_max_k)
+            bw = jax.lax.dynamic_slice_in_dim(bhat, seg.off + me * shard, shard)
+            xl = (bw - s) / d
+            if strategy == "all_gather":
+                # values only, in position order — the gathered window IS
+                # the segment's contiguous permuted-space slice
+                win = jax.lax.all_gather(xl, axis, tiled=True)  # (R_pad[, m])
+            else:  # psum: full-vector exchange — the naive barrier port
+                lane = me * shard + jnp.arange(shard)
+                mask = lane < seg.R
+                xl = jnp.where(mask[:, None] if batched else mask, xl, 0)
+                contrib = jnp.zeros_like(x)
+                contrib = jax.lax.dynamic_update_slice_in_dim(
+                    contrib, xl, seg.off + me * shard, 0)
+                summed = jax.lax.psum(contrib, axis)
+                win = jax.lax.slice_in_dim(
+                    summed, seg.off, seg.off + seg.R_pad)
+            x = jax.lax.dynamic_update_slice_in_dim(x, win, seg.off, 0)
+        return x[pos]
+
+    fn = shard_map(
+        _solve,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(),
+        check_vma=False,
+    )
+
+    def solve(b: jnp.ndarray, values) -> jnp.ndarray:
+        vals_t, diag_t = values
+        return fn(b, perm_d, pos_d, vals_t, diag_t, cols_d)
+
+    return solve, values0, repack

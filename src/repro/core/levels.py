@@ -160,6 +160,17 @@ class LevelSets:
         uniq, cnt = np.unique(self.counts, return_counts=True)
         return {int(u): int(c) for u, c in zip(uniq, cnt)}
 
+    def row_permutation(self) -> np.ndarray:
+        """Level-order row permutation: original row id at each position when
+        rows are laid out level by level.  This is the *analysis-side* view
+        of the permuted execution space; the executed permutation comes from
+        :meth:`repro.core.codegen.Schedule.perm` (which additionally reflects
+        in-slab nnz sorting and bucket splits) — both place every level's
+        rows in one contiguous span."""
+        if not self.rows:
+            return np.zeros(0, dtype=np.int64)
+        return np.concatenate(self.rows).astype(np.int64)
+
 
 def build_level_sets(L: CSRMatrix, level: np.ndarray | None = None) -> LevelSets:
     if level is None:

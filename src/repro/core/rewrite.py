@@ -27,7 +27,15 @@ import numpy as np
 from .csr import CSRMatrix, from_coo
 from .levels import LevelSets, build_level_sets, compute_levels, compute_upper_levels
 
-__all__ = ["RewriteConfig", "RewriteStats", "RewriteResult", "rewrite_matrix"]
+__all__ = [
+    "RewriteConfig",
+    "RewriteStats",
+    "RewriteResult",
+    "RewritePlan",
+    "RewriteReplayError",
+    "rewrite_matrix",
+    "replay_rewrite_values",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +84,33 @@ class RewriteStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class RewritePlan:
+    """Symbolic record of the eliminations a :func:`rewrite_matrix` run
+    performed: for each rewritten row, the ordered dependency rows that were
+    eliminated into it.  Replaying the plan on *new values of the same
+    sparsity pattern* (:func:`replay_rewrite_values`) reproduces the numeric
+    transformation in O(rewritten nnz) without re-running level analysis or
+    the elimination policy — the rewrite half of value-only refresh."""
+
+    rows: tuple              # ((i, (j0, j1, ...)), ...) in processing order
+    use_original_rows: bool
+    upper: bool
+
+
+class RewriteReplayError(ValueError):
+    """The recorded plan does not numerically transfer to the new values
+    (zero pivot, or fill produced outside the cached L' pattern — e.g. an
+    exact cancellation in the original values that no longer cancels).
+    Callers should fall back to a cold rebuild."""
+
+
+@dataclasses.dataclass(frozen=True)
 class RewriteResult:
     L: CSRMatrix            # transformed matrix L'
     E: CSRMatrix            # RHS operator, b' = E b (unit lower triangular)
     levels: LevelSets       # level sets of L'
     stats: RewriteStats
+    plan: Optional[RewritePlan] = None   # replayable elimination record
 
 
 def _row_dict(L: CSRMatrix, i: int) -> Dict[int, float]:
@@ -140,6 +170,7 @@ def rewrite_matrix(
     fill_added = 0
     eliminations = 0
     rows_rewritten = 0
+    plan_rows: list = []   # (i, tuple(js)) — the replayable elimination log
 
     # Level-ascending order: every dependency j of row i lives in a strictly
     # lower level (j < i for lower-triangular systems, j > i for upper), so
@@ -154,6 +185,7 @@ def rewrite_matrix(
             row = _row_dict(L, i)
             rhs = {i: 1.0}
             changed = False
+            js: list = []
             # Deps needing elimination: rows living in removed (thin) levels.
             # With use_original_rows=True an elimination can reintroduce thin
             # deps, so loop to a fixed point; otherwise one pass suffices.
@@ -186,6 +218,7 @@ def rewrite_matrix(
                         del rhs[c]
                 fill_added += len(row) - before
                 eliminations += 1
+                js.append(j)
                 changed = True
                 if not config.use_original_rows:
                     # current-row elimination never reintroduces thin deps
@@ -196,6 +229,7 @@ def rewrite_matrix(
                 mod_rows[i] = row
                 mod_rhs[i] = rhs
                 rows_rewritten += 1
+                plan_rows.append((i, tuple(js)))
 
     # ---- materialize L' and E as CSR --------------------------------------
     r_rows, r_cols, r_vals = [], [], []
@@ -233,4 +267,92 @@ def rewrite_matrix(
         rows_rewritten=rows_rewritten,
         eliminations=eliminations,
     )
-    return RewriteResult(L=Lp, E=E, levels=new_levels, stats=stats)
+    plan = RewritePlan(rows=tuple(plan_rows),
+                       use_original_rows=config.use_original_rows,
+                       upper=upper)
+    return RewriteResult(L=Lp, E=E, levels=new_levels, stats=stats, plan=plan)
+
+
+def replay_rewrite_values(
+    system: CSRMatrix,
+    plan: RewritePlan,
+    Lp: CSRMatrix,
+    E: CSRMatrix,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Replay a recorded elimination plan on **new values** of the same
+    sparsity pattern.
+
+    ``system`` carries the original pattern with the *new* data; ``Lp``/``E``
+    are the cached rewrite outputs whose patterns the new values must land
+    in.  Returns ``(lp_data, e_data)`` aligned to ``Lp``/``E`` — the numeric
+    half of :meth:`SpTRSV.refresh`: no level analysis, no elimination-policy
+    decisions, O(nnz) vectorized copy for untouched rows plus a dict replay
+    over the (few) rewritten ones.
+
+    Raises :class:`RewriteReplayError` when the plan does not transfer (a
+    zero pivot, or fill landing outside the cached pattern — possible only
+    when the *original* values produced an exact cancellation that the new
+    values do not).  Callers should treat that as "rebuild cold".
+    """
+    n = system.n
+    data = system.data
+    diag = system.diagonal(first=plan.upper)
+    indptr, indices = system.indptr, system.indices
+
+    def orig_row(j: int) -> Dict[int, float]:
+        lo, hi = int(indptr[j]), int(indptr[j + 1])
+        return dict(zip(indices[lo:hi].tolist(), data[lo:hi].tolist()))
+
+    mod_rows: Dict[int, Dict[int, float]] = {}
+    mod_rhs: Dict[int, Dict[int, float]] = {}
+    for i, js in plan.rows:
+        row = orig_row(i)
+        rhs = {i: 1.0}
+        for j in js:
+            dj = float(diag[j])
+            if dj == 0.0:
+                raise RewriteReplayError(f"zero pivot at row {j}")
+            t = row.get(j, 0.0) / dj
+            src_row = (orig_row(j) if plan.use_original_rows
+                       else mod_rows.get(j) or orig_row(j))
+            for c, v in src_row.items():
+                row[c] = row.get(c, 0.0) - t * v
+            row.pop(j, None)   # exact cancellation of the eliminated entry
+            src_rhs = ({j: 1.0} if plan.use_original_rows
+                       else mod_rhs.get(j, {j: 1.0}))
+            for c, v in src_rhs.items():
+                rhs[c] = rhs.get(c, 0.0) - t * v
+        mod_rows[i] = row
+        mod_rhs[i] = rhs
+
+    # --- untouched rows: vectorized pattern-aligned copy -------------------
+    is_mod = np.zeros(n, dtype=bool)
+    if mod_rows:
+        is_mod[list(mod_rows)] = True
+    lp_data = np.zeros(Lp.nnz, dtype=data.dtype)
+    e_data = np.zeros(E.nnz, dtype=data.dtype)
+    um = np.nonzero(~is_mod)[0]
+    cnt = (Lp.indptr[um + 1] - Lp.indptr[um]).astype(np.int64)
+    if not np.array_equal(cnt, (indptr[um + 1] - indptr[um]).astype(np.int64)):
+        raise RewriteReplayError("pattern drift in unmodified rows")
+    total = int(cnt.sum())
+    off = np.cumsum(cnt) - cnt
+    rel = np.arange(total, dtype=np.int64) - np.repeat(off, cnt)
+    lp_data[np.repeat(Lp.indptr[um], cnt) + rel] = \
+        data[np.repeat(indptr[um], cnt) + rel]
+    e_data[E.indptr[um]] = 1.0   # unmodified rows: E row is the unit diagonal
+
+    # --- rewritten rows: scatter the replayed dicts into the patterns ------
+    for i in mod_rows:
+        for M, src, out in ((Lp, mod_rows[i], lp_data),
+                            (E, mod_rhs[i], e_data)):
+            lo, hi = int(M.indptr[i]), int(M.indptr[i + 1])
+            cols_p = M.indices[lo:hi]
+            for p in range(lo, hi):
+                out[p] = src.get(int(M.indices[p]), 0.0)
+            extra = set(src) - set(cols_p.tolist())
+            if any(src[c] != 0.0 for c in extra):
+                raise RewriteReplayError(
+                    f"row {i}: fill outside the cached pattern "
+                    f"(cols {sorted(c for c in extra if src[c] != 0.0)})")
+    return lp_data, e_data

@@ -23,18 +23,33 @@ ELL slabs every executor/kernel already consumes.
 
 Strategy × capability matrix
 ----------------------------
-=================  ==========  =========  =========  =========  =========  ============
-strategy           single RHS  batched    rewrite    transpose  coarsen    distributed
-=================  ==========  =========  =========  =========  =========  ============
-serial             yes         yes        yes        yes        n/a        no
-levelset           yes         yes        yes        yes        yes        no
-levelset_unroll    yes         yes        yes        yes        yes        no
-pallas_level       yes         yes        yes        yes        yes        no
-pallas_fused       yes         yes        yes        yes        n/a (1 seg) no
-distributed        yes         yes        yes        yes        yes        yes (mesh axis)
+=================  ==========  =========  =========  =========  =========  =========  ============
+strategy           single RHS  batched    rewrite    transpose  coarsen    refresh    distributed
+=================  ==========  =========  =========  =========  =========  =========  ============
+serial             yes         yes        yes        yes        n/a        yes        no
+levelset           yes         yes        yes        yes        yes        yes        no
+levelset_unroll    yes         yes        yes        yes        yes        yes        no
+pallas_level       yes         yes        yes        yes        yes        yes        no
+pallas_fused       yes         yes        yes        yes        n/a (1 seg) yes       no
+distributed        yes         yes        yes        yes        yes        yes        yes (mesh axis)
 auto               planner: picks serial / levelset / levelset_unroll /
                    pallas_fused from the analysis + schedule cost model
-=================  ==========  =========  =========  =========  =========  ============
+=================  ==========  =========  =========  =========  =========  =========  ============
+
+Permuted layout + value-only refresh (``layout=``, ``refresh``)
+---------------------------------------------------------------
+``layout="permuted"`` (default) executes in schedule-order permuted space:
+each segment's rows are a contiguous slice of ``x̂`` (static-offset
+``dynamic_update_slice`` writes, static RHS slices), ``b`` is permuted and
+``x`` un-permuted exactly once at the boundary, and all slab values stream
+from ONE packed flat buffer passed as a runtime jit argument.  Because the
+values are arguments — not trace-time constants — ``solver.refresh(new_data)``
+swaps in new values of the same sparsity pattern with one O(nnz) re-pack
+and a jit cache hit: no level analysis, no re-trace, no re-compile.  That
+is the dominant production pattern (numeric re-factorization between PCG /
+Newton steps).  ``layout="scatter"`` keeps the legacy per-segment scatter
+executors; refresh on it falls back to a cold rebuild.  ``solver.stats()``
+reports the packed-buffer bytes, padding waste and permutation status.
 
 Strategies
 ----------
@@ -82,6 +97,7 @@ analysis)::
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable, Optional
 
 import jax
@@ -91,6 +107,7 @@ import numpy as np
 from .analysis import MatrixAnalysis, analyze
 from .coarsen import CoarsenConfig, PlanDecision, coarsen_schedule, plan_strategy
 from .codegen import (
+    GATHER_UNROLL_MAX_K,
     Schedule,
     build_schedule,
     make_levelset_solver,
@@ -99,9 +116,25 @@ from .codegen import (
 )
 from .csr import CSRMatrix
 from .levels import LevelSets, build_level_sets, build_reverse_level_sets
-from .rewrite import RewriteConfig, RewriteResult, rewrite_matrix
+from .packed import (
+    PackedStats,
+    build_packed_layout,
+    make_packed_levelset_solver,
+    make_packed_rhs_transform,
+    make_packed_serial_solver,
+    pack_values,
+)
+from .rewrite import (
+    RewriteConfig,
+    RewriteReplayError,
+    RewriteResult,
+    replay_rewrite_values,
+    rewrite_matrix,
+)
 
-__all__ = ["SpTRSV", "STRATEGIES"]
+__all__ = ["SpTRSV", "STRATEGIES", "LAYOUTS"]
+
+logger = logging.getLogger(__name__)
 
 STRATEGIES = (
     "serial",
@@ -112,6 +145,15 @@ STRATEGIES = (
     "distributed",
     "auto",
 )
+
+# Execution-space layouts.  "permuted" (default) runs the whole solve in
+# schedule-order permuted space with one packed streaming value buffer
+# (:mod:`repro.core.packed`): contiguous dynamic-update-slice writes instead
+# of per-segment row scatters, b permuted / x un-permuted exactly once at the
+# API boundary, and value-only ``refresh`` without re-tracing.  "scatter" is
+# the PR-3 layout (per-segment row-id scatters, values embedded as trace-time
+# constants) — kept as the equivalence/benchmark baseline.
+LAYOUTS = ("permuted", "scatter")
 
 
 def _as_coarsen_config(coarsen) -> Optional[CoarsenConfig]:
@@ -126,22 +168,54 @@ def _as_coarsen_config(coarsen) -> Optional[CoarsenConfig]:
 
 
 @dataclasses.dataclass
+class _RefreshCtx:
+    """Cached symbolic state for value-only refresh.
+
+    ``source`` is the user's original factor (pattern reference for
+    validating new values); ``values_map`` reorders its data into the solved
+    system's storage (the CSC permutation for transpose solvers, identity
+    otherwise); ``rewrite`` carries the replayable elimination plan and the
+    cached L'/E patterns; ``repack``/``e_repack`` turn target-system data
+    into the executor's runtime value buffers; ``rebuild`` is the cold
+    fallback (scatter layout, or a rewrite plan that does not numerically
+    transfer)."""
+
+    source: CSRMatrix
+    system: CSRMatrix
+    values_map: Optional[np.ndarray]
+    rewrite: Optional[RewriteResult]
+    repack: Optional[Callable]
+    e_repack: Optional[Callable]
+    rebuild: Callable
+
+
+@dataclasses.dataclass
 class SpTRSV:
     """A matrix-specialized, jit-compiled triangular solver.
 
     ``transpose=True`` solvers execute the backward sweep ``Lᵀ x = b``; the
     executor machinery is identical — only the schedule (backward level sets,
-    column-packed slabs) differs."""
+    column-packed slabs) differs.
+
+    ``layout="permuted"`` (default) executes in schedule-order permuted
+    space with packed streaming value buffers and supports value-only
+    :meth:`refresh`; ``layout="scatter"`` is the legacy per-segment
+    row-scatter executor with values embedded as constants."""
 
     n: int
     strategy: str
     analysis: MatrixAnalysis
     schedule: Optional[Schedule]
     rewrite_result: Optional[RewriteResult]
-    _solve_fn: Callable[[jnp.ndarray], jnp.ndarray]
-    _rhs_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]]
+    _solve_fn: Callable
+    _rhs_fn: Optional[Callable]
     transpose: bool = False
     plan: Optional[PlanDecision] = None   # set when strategy="auto" planned
+    layout: str = "scatter"
+    packed_stats: Optional[PackedStats] = None
+    _values: Optional[tuple] = None       # runtime value buffers (permuted)
+    _e_values: Optional[jnp.ndarray] = None
+    _refresh_ctx: Optional[_RefreshCtx] = None
 
     @staticmethod
     def build(
@@ -158,6 +232,8 @@ class SpTRSV:
         dist_strategy: str = "all_gather",
         interpret: bool = True,
         jit: bool = True,
+        layout: str = "permuted",
+        gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
     ) -> "SpTRSV":
         """Build a solver for ``L x = b`` (or ``Lᵀ x = b`` with
         ``transpose=True``).  ``L`` is always the lower-triangular factor.
@@ -167,12 +243,24 @@ class SpTRSV:
         consumed by the levelset, pallas_level and distributed executors —
         serial has no segments and pallas_fused is already one segment).
         ``strategy="auto"`` lets the planner pick both the strategy and
-        whether coarsening pays; the decision lands on ``solver.plan``."""
+        whether coarsening pays; the decision lands on ``solver.plan``.
+
+        ``layout="permuted"`` (default) runs the solve in schedule-order
+        permuted space (``b`` permuted in / ``x`` un-permuted out exactly
+        once; contiguous slice writes per segment; one packed streaming
+        value buffer) and enables :meth:`refresh`.  ``layout="scatter"``
+        keeps the legacy per-segment scatter executors.
+
+        ``gather_unroll_max_k`` bounds the batched per-k gather unrolling
+        (see :data:`repro.core.codegen.GATHER_UNROLL_MAX_K`); wider slabs
+        fall back to the fused 3-D gather and log the fallback."""
         assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
         if transpose:
             system, levels = L.transpose(), build_reverse_level_sets(L)
+            values_map = np.argsort(L.indices, kind="stable")
         else:
             system, levels = L, build_level_sets(L)
+            values_map = None
         return SpTRSV._build_system(
             system, levels, upper=transpose,
             strategy=strategy, rewrite=rewrite,
@@ -181,6 +269,8 @@ class SpTRSV:
             coarsen=coarsen,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             interpret=interpret, jit=jit,
+            layout=layout, gather_unroll_max_k=gather_unroll_max_k,
+            source=L, values_map=values_map,
         )
 
     @staticmethod
@@ -193,16 +283,20 @@ class SpTRSV:
         schedule is packed from an O(nnz) CSC view of ``L`` — the whole
         reverse-permute + second-analysis pipeline of the legacy
         preconditioner path is gone.  Accepts the same keyword arguments as
-        :meth:`build` (except ``transpose``)."""
+        :meth:`build` (except ``transpose``).  Both solvers support
+        :meth:`refresh` against new values of ``L`` (the backward solver
+        reorders them through the shared CSC map)."""
         assert "transpose" not in kwargs, "build_pair builds both directions"
         assert L.is_lower_triangular(), "SpTRSV requires lower-triangular L with nonzero diagonal"
         levels = build_level_sets(L)
-        fwd = SpTRSV._build_system(L, levels, upper=False, **kwargs)
+        fwd = SpTRSV._build_system(L, levels, upper=False,
+                                   source=L, values_map=None, **kwargs)
         # backward levels derived from the forward wavefronts — the shared
         # analysis; no second per-row DAG traversal
         bwd = SpTRSV._build_system(
             L.transpose(), build_reverse_level_sets(L, forward=levels),
-            upper=True, **kwargs)
+            upper=True, source=L,
+            values_map=np.argsort(L.indices, kind="stable"), **kwargs)
         return fwd, bwd
 
     @staticmethod
@@ -221,20 +315,43 @@ class SpTRSV:
         dist_strategy: str = "all_gather",
         interpret: bool = True,
         jit: bool = True,
+        layout: str = "permuted",
+        gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
+        source: Optional[CSRMatrix] = None,
+        values_map: Optional[np.ndarray] = None,
     ) -> "SpTRSV":
         """Shared builder: ``system`` is the triangular matrix of the system
         actually solved (``L`` forward, ``L.transpose()`` backward) with its
-        level sets already analyzed."""
+        level sets already analyzed.  ``source``/``values_map`` record where
+        the system's values came from (the user's factor and the data
+        reordering into system storage) for :meth:`refresh`."""
         assert strategy in STRATEGIES, strategy
+        assert layout in LAYOUTS, layout
+        strategy_arg = strategy
+        build_kwargs = dict(
+            upper=upper, strategy=strategy_arg, rewrite=rewrite,
+            unroll_threshold=unroll_threshold,
+            bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen,
+            mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
+            interpret=interpret, jit=jit, layout=layout,
+            gather_unroll_max_k=gather_unroll_max_k,
+        )
+        if source is None:
+            source, values_map = system, None
         analysis = analyze(system, levels)
         ccfg = _as_coarsen_config(coarsen)
 
         rres: Optional[RewriteResult] = None
         rhs_fn = None
+        e_values = None
+        e_repack = None
         target, target_levels = system, levels
         if rewrite is not None:
             rres = rewrite_matrix(system, levels, rewrite, upper=upper)
-            rhs_fn = make_rhs_transform(rres)
+            if layout == "permuted":
+                rhs_fn, e_values, e_repack = make_packed_rhs_transform(rres)
+            else:
+                rhs_fn = make_rhs_transform(rres)
             target, target_levels = rres.L, rres.levels
 
         _memo: dict = {}
@@ -276,48 +393,123 @@ class SpTRSV:
         def _maybe_coarsen(schedule: Schedule) -> Schedule:
             return _coarsened(ccfg) if ccfg is not None else schedule
 
+        permuted = layout == "permuted"
+        values: Optional[tuple] = None
+        repack: Optional[Callable] = None
+        packed_stats: Optional[PackedStats] = None
         schedule: Optional[Schedule] = None
         if strategy == "serial":
-            fn = make_serial_solver(target, upper=upper)
+            if permuted:
+                # no level segments to permute, but the scan operands become
+                # runtime buffers so refresh skips the re-trace
+                fn, values, repack = make_packed_serial_solver(
+                    target, upper=upper)
+                packed_stats = PackedStats(
+                    permutation_applied=False,
+                    value_bytes=sum(int(v.nbytes) for v in values),
+                    index_bytes=0,
+                    padded_value_bytes=0,
+                    n_pad=system.n,
+                    num_segments=1,
+                )
+            else:
+                fn = make_serial_solver(target, upper=upper)
         elif strategy in ("levelset", "levelset_unroll"):
             schedule = _maybe_coarsen(_schedule())
-            fn = make_levelset_solver(
-                schedule,
-                unroll_threshold=unroll_threshold if strategy == "levelset_unroll" else 0,
-            )
+            ut = unroll_threshold if strategy == "levelset_unroll" else 0
+            if permuted:
+                playout = build_packed_layout(schedule)
+                fn = make_packed_levelset_solver(
+                    playout, unroll_threshold=ut,
+                    gather_unroll_max_k=gather_unroll_max_k)
+                values = (jnp.asarray(playout.vals_flat),
+                          jnp.asarray(playout.diag_flat))
+                repack = lambda data, _pl=playout: tuple(  # noqa: E731
+                    jnp.asarray(a) for a in pack_values(_pl, data))
+                packed_stats = playout.stats()
+            else:
+                fn = make_levelset_solver(
+                    schedule, unroll_threshold=ut,
+                    gather_unroll_max_k=gather_unroll_max_k)
         elif strategy == "pallas_level":
             from repro.kernels.sptrsv_level import ops as level_ops
 
             schedule = _maybe_coarsen(_schedule())
-            fn = level_ops.make_solver(schedule, interpret=interpret)
+            if permuted:
+                fn, values, repack, playout = level_ops.make_packed_solver(
+                    schedule, interpret=interpret)
+                packed_stats = playout.stats()
+            else:
+                fn = level_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "pallas_fused":
             from repro.kernels.sptrsv_fused import ops as fused_ops
 
             # fused is already a single segment; coarsening would only
             # re-partition its chunk walk, so the layout consumes sub-slabs
             schedule = _schedule()
-            fn = fused_ops.make_solver(schedule, interpret=interpret)
+            if permuted:
+                fn, values, repack, flay = fused_ops.make_packed_solver(
+                    schedule, interpret=interpret)
+                packed_stats = PackedStats(
+                    permutation_applied=True,
+                    value_bytes=int(flay.vals.nbytes + flay.diag.nbytes),
+                    index_bytes=int(flay.cols.nbytes),
+                    padded_value_bytes=int(
+                        ((flay.val_src < 0).sum() + (flay.diag_src < 0).sum())
+                        * flay.vals.itemsize),
+                    n_pad=flay.n_pad,
+                    num_segments=1,
+                )
+            else:
+                fn = fused_ops.make_solver(schedule, interpret=interpret)
         elif strategy == "distributed":
-            from .dist import make_distributed_solver, shard_schedule
+            from .dist import (
+                build_packed_dist_layout,
+                make_distributed_solver,
+                make_packed_distributed_solver,
+                shard_schedule,
+            )
 
             assert mesh is not None, "distributed strategy needs a mesh"
             schedule = _maybe_coarsen(_schedule())
             ndev = int(np.prod([mesh.shape[a] for a in (mesh_axis,)]))
-            dsched = shard_schedule(schedule, ndev)
-            fn = make_distributed_solver(dsched, mesh, mesh_axis, strategy=dist_strategy)
+            if permuted:
+                playout = build_packed_dist_layout(schedule, ndev)
+                fn, values, repack = make_packed_distributed_solver(
+                    playout, mesh, mesh_axis, strategy=dist_strategy,
+                    gather_unroll_max_k=gather_unroll_max_k)
+                packed_stats = playout.stats()
+            else:
+                dsched = shard_schedule(schedule, ndev)
+                fn = make_distributed_solver(
+                    dsched, mesh, mesh_axis, strategy=dist_strategy)
         else:  # pragma: no cover
             raise ValueError(strategy)
 
-        if rhs_fn is not None:
-            # Compose b' = E b with the solve as two separate XLA programs.
-            # A single jit over both lets XLA fuse the batched SpMV into the
-            # per-level consumers and recompute it, a >10x slowdown at m=64
-            # on CPU; the extra dispatch costs microseconds.
-            base_c = jax.jit(fn) if jit else fn
-            rhs_c = jax.jit(rhs_fn) if jit else rhs_fn
-            solve_fn = lambda b, _r=rhs_c, _s=base_c: _s(_r(b))  # noqa: E731
-        else:
-            solve_fn = jax.jit(fn) if jit else fn
+        # jit the RHS transform b' = E b separately from the solve.  A
+        # single jit over both lets XLA fuse the batched SpMV into the
+        # per-level consumers and recompute it, a >10x slowdown at m=64 on
+        # CPU; the extra dispatch costs microseconds.
+        solve_fn = jax.jit(fn) if jit else fn
+        rhs_c = (jax.jit(rhs_fn) if jit else rhs_fn) if rhs_fn is not None \
+            else None
+
+        def _rebuild(data: np.ndarray) -> "SpTRSV":
+            sys_data = data[values_map] if values_map is not None else data
+            sys2 = CSRMatrix(system.indptr, system.indices,
+                             sys_data.astype(system.dtype, copy=False),
+                             system.shape)
+            return SpTRSV._build_system(
+                sys2, levels, source=CSRMatrix(
+                    source.indptr, source.indices,
+                    data.astype(source.dtype, copy=False), source.shape),
+                values_map=values_map, **build_kwargs)
+
+        ctx = _RefreshCtx(
+            source=source, system=system, values_map=values_map,
+            rewrite=rres, repack=repack, e_repack=e_repack,
+            rebuild=_rebuild,
+        )
         return SpTRSV(
             n=system.n,
             strategy=strategy,
@@ -325,9 +517,14 @@ class SpTRSV:
             schedule=schedule,
             rewrite_result=rres,
             _solve_fn=solve_fn,
-            _rhs_fn=rhs_fn,
+            _rhs_fn=rhs_c,
             transpose=upper,
             plan=plan,
+            layout=layout,
+            packed_stats=packed_stats,
+            _values=values,
+            _e_values=e_values,
+            _refresh_ctx=ctx,
         )
 
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:
@@ -335,10 +532,19 @@ class SpTRSV:
         may be ``(n,)`` (one system) or ``(n, m)`` (m independent systems
         solved in one batched pass).  Each distinct batch width compiles
         once (shapes are trace-time constants — the executor is matrix-
-        *and* batch-specialized)."""
+        *and* batch-specialized).
+
+        Permuted-layout solvers permute ``b`` and un-permute ``x`` exactly
+        once inside the executor (two O(n) gathers at the API boundary —
+        the price of contiguous per-segment reads/writes)."""
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(
                 f"b must be ({self.n},) or ({self.n}, m); got {b.shape}")
+        if self._rhs_fn is not None:
+            b = (self._rhs_fn(b, self._e_values)
+                 if self._e_values is not None else self._rhs_fn(b))
+        if self._values is not None:
+            return self._solve_fn(b, self._values)
         return self._solve_fn(b)
 
     def solve_batched(self, B: jnp.ndarray) -> jnp.ndarray:
@@ -351,6 +557,105 @@ class SpTRSV:
             raise ValueError(f"solve_batched expects (n, m); got {B.shape}")
         return self.solve(B)
 
-    @property
-    def stats(self):
-        return self.rewrite_result.stats if self.rewrite_result else None
+    def refresh(self, new_values) -> "SpTRSV":
+        """Value-only numeric refresh: swap in new matrix **values** of the
+        same sparsity pattern, reusing the whole cached symbolic state —
+        level analysis, permutation, packed-buffer offsets, coarsening, the
+        ``auto`` planner decision, and (crucially) the compiled executable.
+
+        ``new_values`` is the new ``data`` array aligned with the original
+        factor's CSR storage (or a :class:`CSRMatrix` with the identical
+        pattern).  For transpose solvers the values are reordered through
+        the cached CSC map; for rewritten solvers the recorded elimination
+        plan is replayed numerically
+        (:func:`repro.core.rewrite.replay_rewrite_values`) to produce new
+        L'/E values in the cached patterns.  The executor's packed value
+        buffers are then re-packed with one vectorized O(nnz) gather and
+        swapped in — no re-trace, no re-compile; this is what a production
+        PCG/IC server needs after each numeric re-factorization.
+
+        Scatter-layout solvers (values embedded as trace-time constants)
+        fall back to a cold rebuild, as does the rare case of a rewrite
+        plan that does not numerically transfer (zero pivot / exact-zero
+        cancellation in the *original* values).  Returns ``self``."""
+        ctx = self._refresh_ctx
+        if ctx is None:
+            raise ValueError("solver was built without refresh state")
+        if isinstance(new_values, CSRMatrix):
+            src = ctx.source
+            if (new_values.nnz != src.nnz
+                    or not np.array_equal(new_values.indptr, src.indptr)
+                    or not np.array_equal(new_values.indices, src.indices)):
+                raise ValueError(
+                    "refresh requires the identical sparsity pattern; "
+                    "rebuild for structural changes")
+            data = np.asarray(new_values.data)
+        else:
+            data = np.asarray(new_values)
+        if data.shape != ctx.source.data.shape:
+            raise ValueError(
+                f"new values must have shape {ctx.source.data.shape} "
+                f"(one per stored nonzero); got {data.shape}")
+
+        def _cold(reason: str) -> "SpTRSV":
+            logger.warning("SpTRSV.refresh: %s — falling back to a cold "
+                           "rebuild", reason)
+            fresh = ctx.rebuild(data)
+            self.__dict__.update(fresh.__dict__)
+            return self
+
+        if ctx.repack is None:
+            return _cold(f"layout={self.layout!r} embeds values as "
+                         "trace-time constants")
+        sys_data = (data[ctx.values_map] if ctx.values_map is not None
+                    else data).astype(ctx.system.dtype, copy=False)
+        if ctx.rewrite is not None:
+            system = CSRMatrix(ctx.system.indptr, ctx.system.indices,
+                               sys_data, ctx.system.shape)
+            try:
+                target_data, e_data = replay_rewrite_values(
+                    system, ctx.rewrite.plan, ctx.rewrite.L, ctx.rewrite.E)
+            except RewriteReplayError as err:
+                return _cold(f"rewrite plan did not transfer ({err})")
+            if ctx.e_repack is not None:
+                self._e_values = ctx.e_repack(e_data)
+            self.rewrite_result = dataclasses.replace(
+                ctx.rewrite,
+                L=CSRMatrix(ctx.rewrite.L.indptr, ctx.rewrite.L.indices,
+                            target_data, ctx.rewrite.L.shape),
+                E=CSRMatrix(ctx.rewrite.E.indptr, ctx.rewrite.E.indices,
+                            e_data, ctx.rewrite.E.shape))
+        else:
+            target_data = sys_data
+        self._values = ctx.repack(target_data)
+        # keep the cached source in sync so chained refreshes validate
+        # against (and rebuild from) the latest values
+        self._refresh_ctx = dataclasses.replace(
+            ctx, source=CSRMatrix(ctx.source.indptr, ctx.source.indices,
+                                  data, ctx.source.shape))
+        return self
+
+    def stats(self) -> dict:
+        """Execution-layout and schedule statistics, including the packed
+        streaming-buffer bytes, padding waste, and whether the permuted
+        layout is active — so benchmarks stop recomputing them ad hoc."""
+        ps = self.packed_stats
+        return {
+            "strategy": self.strategy,
+            "layout": self.layout,
+            "transpose": self.transpose,
+            "n": self.n,
+            "nnz": self.analysis.nnz,
+            "segments": (self.schedule.num_segments
+                         if self.schedule is not None else 1),
+            "permutation_applied": bool(ps and ps.permutation_applied),
+            "packed_value_bytes": ps.value_bytes if ps else None,
+            "packed_index_bytes": ps.index_bytes if ps else None,
+            "padded_value_bytes": ps.padded_value_bytes if ps else None,
+            "n_pad": ps.n_pad if ps else None,
+            "refreshable_in_place": (self._refresh_ctx is not None
+                                     and self._refresh_ctx.repack is not None),
+            "rewrite": (self.rewrite_result.stats.summary()
+                        if self.rewrite_result else None),
+            "plan": self.plan.reason if self.plan else None,
+        }

@@ -8,7 +8,7 @@ VMEM scratch and contribute nothing."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +17,7 @@ from repro.core.codegen import Schedule
 
 from .kernel import fused_solve, fused_solve_batched
 
-__all__ = ["FusedLayout", "build_layout", "make_solver"]
+__all__ = ["FusedLayout", "build_layout", "make_solver", "make_packed_solver"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +28,8 @@ class FusedLayout:
     ``pos[i]``       = position of original row i.
     ``cols``         (K, n_pad) dependency *positions* (pad: points at a
                      pad position whose value is always 0).
+    ``val_src``/``diag_src`` map packed values back to the source matrix's
+    ``data`` indices (-1 padding) — the value-only refresh maps.
     """
 
     n: int
@@ -39,6 +41,8 @@ class FusedLayout:
     cols: np.ndarray
     vals: np.ndarray
     diag: np.ndarray
+    val_src: Optional[np.ndarray] = None
+    diag_src: Optional[np.ndarray] = None
 
     @property
     def padded_flops(self) -> int:
@@ -72,15 +76,21 @@ def build_layout(schedule: Schedule, chunk: int = 512) -> FusedLayout:
     cols = np.zeros((K, n_pad), dtype=np.int32)
     vals = np.zeros((K, n_pad), dtype=val_dtype)
     diag = np.ones((n_pad,), dtype=val_dtype)
+    val_src = np.full((K, n_pad), -1, dtype=np.int64)
+    diag_src = np.full((n_pad,), -1, dtype=np.int64)
     for (o, _), slab in zip(spans, slabs):
         k = slab.K
         # remap dependency columns (original row ids) to positions
         cols[:k, o : o + slab.R] = pos[slab.cols]
         vals[:k, o : o + slab.R] = slab.vals
         diag[o : o + slab.R] = slab.diag
+        if slab.val_src is not None:
+            val_src[:k, o : o + slab.R] = slab.val_src
+            diag_src[o : o + slab.R] = slab.diag_src
     return FusedLayout(
         n=n, n_pad=n_pad, chunk=chunk, K=K,
         perm_rows=perm_rows, pos=pos, cols=cols, vals=vals, diag=diag,
+        val_src=val_src, diag_src=diag_src,
     )
 
 
@@ -107,3 +117,41 @@ def make_solver(
         return xp[pos]
 
     return solve
+
+
+def make_packed_solver(
+    schedule: Schedule, *, interpret: bool = True, chunk: int = 512
+):
+    """Refresh-capable fused solver: identical kernel and layout to
+    :func:`make_solver` (the fused kernel already executes in permuted
+    space), but the packed ``vals``/``diag`` buffers ride as runtime
+    arguments so a value-only refresh swaps them without re-tracing.
+
+    Returns ``(solve(b, values), values0, repack, layout)``."""
+    lay = build_layout(schedule, chunk)
+    perm_rows = jnp.asarray(lay.perm_rows)
+    pos = jnp.asarray(lay.pos[: lay.n])
+    cols = jnp.asarray(lay.cols)
+    values0 = (jnp.asarray(lay.vals), jnp.asarray(lay.diag))
+    vsrc, dsrc = lay.val_src, lay.diag_src
+
+    def repack(target_data):
+        from repro.core.packed import gather_src
+
+        return (jnp.asarray(gather_src(target_data, vsrc, 0.0, lay.vals.dtype)),
+                jnp.asarray(gather_src(target_data, dsrc, 1.0, lay.diag.dtype)))
+
+    def solve(b: jnp.ndarray, values) -> jnp.ndarray:
+        """b: (n,) or (n, m) — one fused kernel either way."""
+        vals, diag = values
+        dt = b.dtype
+        kern = fused_solve_batched if b.ndim == 2 else fused_solve
+        b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
+        bl_perm = b_ext[perm_rows]  # pad rows -> b_ext[n] = 0
+        xp = kern(
+            bl_perm, cols, vals.astype(dt), diag.astype(dt),
+            chunk=lay.chunk, interpret=interpret,
+        )
+        return xp[pos]
+
+    return solve, values0, repack, lay

@@ -18,10 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codegen import Schedule, stack_sub_slabs
+from repro.core.packed import build_packed_layout, pack_values
 
 from .kernel import level_solve_blocks, level_solve_blocks_batched
 
-__all__ = ["make_solver"]
+__all__ = ["make_solver", "make_packed_solver"]
 
 
 def _ceil_to(v: int, m: int) -> int:
@@ -106,3 +107,82 @@ def make_solver(
         return x[:n]
 
     return solve
+
+
+def make_packed_solver(
+    schedule: Schedule, *, interpret: bool = True, block_rows: int = 512
+):
+    """Permuted-space packed variant: one kernel call per segment, but the
+    level's solution lands with a contiguous ``dynamic_update_slice`` at a
+    static offset instead of a row-id scatter, ``b`` is permuted once at
+    entry, and the slab values stream from one flat runtime buffer (so
+    ``SpTRSV.refresh`` swaps values without re-tracing any kernel).
+
+    Returns ``(solve(b, values), values0, repack, layout)``."""
+
+    def _pad(r):
+        return _ceil_to(r, block_rows if r > block_rows // 4 else 128)
+
+    layout = build_packed_layout(
+        schedule, pad_rows=_pad, pad_chain_rows=_pad,
+        block_rows_for=lambda rp: min(block_rows, rp))
+    n, n_pad = layout.n, layout.n_pad
+    n_x = _ceil_to(n_pad, 128)
+    cols_flat = jnp.asarray(layout.cols_flat)
+    perm = jnp.asarray(layout.perm)
+    pos = jnp.asarray(layout.pos)
+    values0 = (jnp.asarray(layout.vals_flat), jnp.asarray(layout.diag_flat))
+
+    def repack(target_data):
+        vf, df = pack_values(layout, target_data)
+        return jnp.asarray(vf), jnp.asarray(df)
+
+    def solve(b: jnp.ndarray, values) -> jnp.ndarray:
+        """b: (n,) or (n, m) — batched RHS solve all columns in one pass."""
+        vals_flat, diag_flat = values
+        dt = b.dtype
+        vf = vals_flat.astype(dt)
+        df = diag_flat.astype(dt)
+        kern = level_solve_blocks_batched if b.ndim == 2 else level_solve_blocks
+        bhat = b[perm]
+        if n_pad > n:
+            bhat = jnp.concatenate(
+                [bhat, jnp.zeros((n_pad - n,) + b.shape[1:], dt)])
+        x = jnp.zeros((n_x,) + b.shape[1:], dt)
+        for seg in layout.segments:
+            K, Rp, br = seg.K, seg.R_pad, seg.block_rows
+            if seg.kind == "chain":
+                d = seg.depth
+                cols_c = jax.lax.slice_in_dim(
+                    cols_flat, seg.col_off, seg.col_off + d * K * Rp
+                ).reshape(d, K, Rp)
+                vals_c = jax.lax.slice_in_dim(
+                    vf, seg.val_off, seg.val_off + d * K * Rp
+                ).reshape(d, K, Rp)
+                diag_c = jax.lax.slice_in_dim(
+                    df, seg.diag_off, seg.diag_off + d * Rp).reshape(d, Rp)
+                sub = jnp.asarray(seg.sub_offs)
+
+                def body(t, xc, _c=cols_c, _v=vals_c, _d=diag_c, _sub=sub,
+                         _Rp=Rp, _br=br):
+                    o = _sub[t]
+                    bw = jax.lax.dynamic_slice_in_dim(bhat, o, _Rp)
+                    xl = kern(xc, bw, _c[t], _v[t], _d[t],
+                              block_rows=_br, interpret=interpret)
+                    return jax.lax.dynamic_update_slice_in_dim(xc, xl, o, 0)
+
+                x = jax.lax.fori_loop(0, d, body, x)
+            else:
+                cols_s = jax.lax.slice_in_dim(
+                    cols_flat, seg.col_off, seg.col_off + K * Rp).reshape(K, Rp)
+                vals_s = jax.lax.slice_in_dim(
+                    vf, seg.val_off, seg.val_off + K * Rp).reshape(K, Rp)
+                diag_s = jax.lax.slice_in_dim(
+                    df, seg.diag_off, seg.diag_off + Rp)
+                bw = jax.lax.slice_in_dim(bhat, seg.off, seg.off + Rp)
+                xl = kern(x, bw, cols_s, vals_s, diag_s,
+                          block_rows=br, interpret=interpret)
+                x = jax.lax.dynamic_update_slice_in_dim(x, xl, seg.off, 0)
+        return x[pos]
+
+    return solve, values0, repack, layout

@@ -152,6 +152,13 @@ class SolveEngine:
     up to ``max_batch``, padding columns with zeros) so the jit cache stays
     bounded: at most log(max_batch) compiled variants per direction, not one
     per queue depth.
+
+    :meth:`refresh` swaps in new factor **values** of the same sparsity
+    pattern across both directions (``SpTRSV.refresh``): the symbolic
+    schedule, permutation, and compiled executables — including every
+    already-compiled batch bucket — are all reused, so a serving tier
+    re-doing numeric factorization (each PCG/IC refactor step) pays one
+    O(nnz) value re-pack instead of a rebuild.
     """
 
     def __init__(self, solver, solver_t=None, *, max_batch: int = 64,
@@ -186,6 +193,18 @@ class SolveEngine:
         else:
             fwd, bwd = SpTRSV.build(L, strategy=strategy, **build_kwargs), None
         return cls(fwd, bwd, max_batch=max_batch, bucket_base=bucket_base)
+
+    def refresh(self, new_values) -> "SolveEngine":
+        """Value-only numeric refresh of the engine's factor: new ``data``
+        for the same sparsity pattern (array aligned with the original L's
+        CSR storage, or a pattern-identical ``CSRMatrix``).  Refreshes the
+        forward and (if present) transpose solver in place — queued requests
+        are unaffected and subsequent solves use the new values with the
+        already-compiled executables."""
+        self.solver.refresh(new_values)
+        if self.solver_t is not None:
+            self.solver_t.refresh(new_values)
+        return self
 
     def submit(self, b: np.ndarray, *, transpose: bool = False) -> SolveRequest:
         b = np.asarray(b)

@@ -1,0 +1,332 @@
+"""Permuted-space packed execution + value-only refresh (tentpole PR).
+
+Covers:
+
+* the schedule-order permutation machinery (``Schedule.perm`` is a true
+  permutation with contiguous per-segment spans, coarsening included);
+* property tests: permuted-space solve ≡ legacy scatter solve across
+  strategy × rewrite × transpose × batch at few-ulp tolerance;
+* ``refresh(values)`` ≡ a fresh ``build`` on regenerated values — including
+  the rewrite replay (``replay_rewrite_values``), transpose reordering, the
+  distributed strategy, and the scatter-layout cold-rebuild fallback;
+* refresh does NOT re-trace the compiled executable (the production
+  economics: O(nnz) re-pack, jit cache hit);
+* the ``gather_unroll_max_k`` build knob (regression: the fallback to the
+  fused 3-D gather still logs and stays correct);
+* ``SpTRSV.stats()`` reports packed-buffer bytes / padding / permutation.
+"""
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RewriteConfig, SpTRSV
+from repro.core.codegen import build_schedule
+from repro.core.coarsen import CoarsenConfig, coarsen_schedule
+from repro.core.csr import CSRMatrix
+from repro.core.packed import build_packed_layout, pack_values
+from repro.core.rewrite import replay_rewrite_values, rewrite_matrix
+from repro.sparse import banded_lower, chain_matrix, lung2_like, random_lower
+
+LOCAL_STRATEGIES = ["serial", "levelset", "levelset_unroll",
+                    "pallas_level", "pallas_fused"]
+
+
+def _lung2():
+    return lung2_like(scale=0.04, fat_levels=5, thin_run=8, dtype=np.float32)
+
+
+def _regen_values(L: CSRMatrix, seed: int) -> np.ndarray:
+    """New values on the same pattern, diagonally dominant either diagonal
+    convention (bump the diagonal entries wherever they are stored)."""
+    rng = np.random.default_rng(seed)
+    data = (L.data + 0.1 * rng.standard_normal(L.nnz)).astype(L.dtype)
+    data[L.indptr[1:] - 1] += 3.0   # lower triangular: diagonal last
+    return data
+
+
+# -------------------------------------------------------------------------
+# permutation machinery
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("coarsen", [False, True])
+@pytest.mark.parametrize("bucket", [0.0, 1.5])
+def test_schedule_perm_is_contiguous_permutation(coarsen, bucket):
+    L = _lung2()
+    sched = build_schedule(L, bucket_pad_ratio=bucket)
+    if coarsen:
+        sched = coarsen_schedule(sched, CoarsenConfig())
+    perm = sched.perm()
+    assert perm.shape == (L.n,)
+    assert np.array_equal(np.sort(perm), np.arange(L.n))  # true permutation
+    offs = sched.row_offsets()
+    assert offs[-1] == L.n
+    for slab, lo, hi in zip(sched.slabs, offs[:-1], offs[1:]):
+        assert np.array_equal(perm[lo:hi], slab.rows)      # contiguous span
+
+
+def test_packed_layout_cols_are_positions_and_src_roundtrip():
+    L = _lung2()
+    sched = coarsen_schedule(build_schedule(L), CoarsenConfig())
+    lay = build_packed_layout(sched)
+    assert lay.n_pad >= L.n
+    # re-packing the ORIGINAL data must reproduce the packed buffers exactly
+    vf, df = pack_values(lay, L.data)
+    np.testing.assert_array_equal(vf, lay.vals_flat)
+    np.testing.assert_array_equal(df, lay.diag_flat)
+    # every non-pad value is addressable through its src index
+    assert (lay.vals_src < L.nnz).all() and (lay.diag_src < L.nnz).all()
+    st = lay.stats()
+    assert st.permutation_applied
+    assert st.value_bytes == lay.vals_flat.nbytes + lay.diag_flat.nbytes
+    assert st.padded_value_bytes < st.value_bytes
+
+
+def test_levelsets_row_permutation():
+    from repro.core import build_level_sets
+
+    L = _lung2()
+    perm = build_level_sets(L).row_permutation()
+    assert np.array_equal(np.sort(perm), np.arange(L.n))
+
+
+# -------------------------------------------------------------------------
+# permuted ≡ scatter across strategy × rewrite × transpose × batch
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", LOCAL_STRATEGIES)
+@pytest.mark.parametrize("rewrite", [None, RewriteConfig(thin_threshold=2)])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_permuted_matches_scatter(strategy, rewrite, transpose):
+    L = _lung2()
+    rng = np.random.default_rng(3)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((L.n, 4)).astype(np.float32))
+    coarsen = True if strategy in ("levelset", "levelset_unroll",
+                                   "pallas_level") else None
+    kw = dict(strategy=strategy, rewrite=rewrite, transpose=transpose,
+              coarsen=coarsen)
+    sp = SpTRSV.build(L, layout="permuted", **kw)
+    ss = SpTRSV.build(L, layout="scatter", **kw)
+    np.testing.assert_allclose(np.asarray(sp.solve(b)),
+                               np.asarray(ss.solve(b)),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sp.solve(B)),
+                               np.asarray(ss.solve(B)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_permuted_matches_scatter_distributed():
+    import jax
+    from jax.sharding import Mesh
+
+    L = _lung2()
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    rng = np.random.default_rng(5)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((L.n, 3)).astype(np.float32))
+    for dist_strategy in ("all_gather", "psum"):
+        kw = dict(strategy="distributed", mesh=mesh, coarsen=True,
+                  dist_strategy=dist_strategy)
+        sp = SpTRSV.build(L, layout="permuted", **kw)
+        ss = SpTRSV.build(L, layout="scatter", **kw)
+        np.testing.assert_allclose(np.asarray(sp.solve(b)),
+                                   np.asarray(ss.solve(b)),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=dist_strategy)
+        np.testing.assert_allclose(np.asarray(sp.solve(B)),
+                                   np.asarray(ss.solve(B)),
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=dist_strategy)
+
+
+# -------------------------------------------------------------------------
+# refresh ≡ fresh build
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", LOCAL_STRATEGIES)
+@pytest.mark.parametrize("rewrite", [None, RewriteConfig(thin_threshold=2)])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_refresh_matches_fresh_build(strategy, rewrite, transpose):
+    L = _lung2()
+    data2 = _regen_values(L, seed=11)
+    L2 = CSRMatrix(L.indptr, L.indices, data2, L.shape)
+    rng = np.random.default_rng(7)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((L.n, 3)).astype(np.float32))
+    kw = dict(strategy=strategy, rewrite=rewrite, transpose=transpose)
+    s = SpTRSV.build(L, **kw)
+    fresh = SpTRSV.build(L2, **kw)
+    assert s.refresh(data2) is s
+    np.testing.assert_allclose(np.asarray(s.solve(b)),
+                               np.asarray(fresh.solve(b)),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(s.solve(B)),
+                               np.asarray(fresh.solve(B)),
+                               rtol=2e-6, atol=2e-6)
+    # refreshed rewrite bookkeeping must carry the NEW values
+    if rewrite is not None:
+        np.testing.assert_allclose(s.rewrite_result.L.data,
+                                   fresh.rewrite_result.L.data,
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_refresh_distributed():
+    import jax
+    from jax.sharding import Mesh
+
+    L = _lung2()
+    data2 = _regen_values(L, seed=13)
+    L2 = CSRMatrix(L.indptr, L.indices, data2, L.shape)
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    rng = np.random.default_rng(9)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    kw = dict(strategy="distributed", mesh=mesh, coarsen=True)
+    s = SpTRSV.build(L, **kw)
+    fresh = SpTRSV.build(L2, **kw)
+    s.refresh(data2)
+    np.testing.assert_allclose(np.asarray(s.solve(b)),
+                               np.asarray(fresh.solve(b)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_refresh_accepts_pattern_identical_csr_and_chains():
+    L = _lung2()
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    s = SpTRSV.build(L, strategy="levelset", coarsen=True)
+    for seed in (21, 22):   # chained refreshes keep validating/rebuilding
+        data2 = _regen_values(L, seed=seed)
+        s.refresh(CSRMatrix(L.indptr, L.indices, data2, L.shape))
+        fresh = SpTRSV.build(CSRMatrix(L.indptr, L.indices, data2, L.shape),
+                             strategy="levelset", coarsen=True)
+        np.testing.assert_allclose(np.asarray(s.solve(b)),
+                                   np.asarray(fresh.solve(b)),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_refresh_rejects_wrong_shape_and_pattern():
+    L = _lung2()
+    s = SpTRSV.build(L, strategy="levelset")
+    with pytest.raises(ValueError, match="one per stored nonzero"):
+        s.refresh(np.ones(L.nnz + 1, dtype=np.float32))
+    other = random_lower(L.n, seed=1, dtype=np.float32)
+    with pytest.raises(ValueError, match="identical sparsity"):
+        s.refresh(other)
+    # same per-row counts (identical indptr) but a moved column must be
+    # rejected too — the cached src maps address the OLD column structure
+    idx2 = L.indices.copy()
+    moved_one = False
+    for i in range(L.n):
+        lo, hi = int(L.indptr[i]), int(L.indptr[i + 1])
+        if hi - lo >= 2 and idx2[lo + 1] - idx2[lo] > 1:
+            idx2[lo + 1] -= 1   # still sorted/unique, different pattern
+            moved_one = True
+            break
+    assert moved_one
+    with pytest.raises(ValueError, match="identical sparsity"):
+        s.refresh(CSRMatrix(L.indptr, idx2, L.data, L.shape))
+
+
+def test_refresh_scatter_layout_falls_back_to_rebuild(caplog):
+    L = _lung2()
+    data2 = _regen_values(L, seed=31)
+    rng = np.random.default_rng(4)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    s = SpTRSV.build(L, strategy="levelset", layout="scatter")
+    with caplog.at_level(logging.WARNING, logger="repro.core.solver"):
+        s.refresh(data2)
+    assert any("cold" in r.message for r in caplog.records)
+    fresh = SpTRSV.build(CSRMatrix(L.indptr, L.indices, data2, L.shape),
+                         strategy="levelset", layout="scatter")
+    np.testing.assert_allclose(np.asarray(s.solve(b)),
+                               np.asarray(fresh.solve(b)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_refresh_does_not_retrace():
+    """The production claim: refresh swaps value buffers and hits the jit
+    cache — no re-trace, no re-compile."""
+    L = _lung2()
+    s = SpTRSV.build(L, strategy="levelset", coarsen=True)
+    rng = np.random.default_rng(6)
+    b = jnp.asarray(rng.standard_normal(L.n).astype(np.float32))
+    s.solve(b).block_until_ready()
+    if not hasattr(s._solve_fn, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this JAX")
+    before = s._solve_fn._cache_size()
+    s.refresh(_regen_values(L, seed=41))
+    s.solve(b).block_until_ready()
+    assert s._solve_fn._cache_size() == before
+
+
+def test_replay_rewrite_values_matches_fresh_rewrite():
+    L = _lung2()
+    res = rewrite_matrix(L, config=RewriteConfig(thin_threshold=2))
+    assert res.plan is not None and res.plan.rows
+    data2 = _regen_values(L, seed=17)
+    L2 = CSRMatrix(L.indptr, L.indices, data2, L.shape)
+    lp_data, e_data = replay_rewrite_values(L2, res.plan, res.L, res.E)
+    fresh = rewrite_matrix(L2, config=RewriteConfig(thin_threshold=2))
+    # same plan on the same pattern → same L'/E patterns, replayed values
+    np.testing.assert_array_equal(fresh.L.indptr, res.L.indptr)
+    np.testing.assert_array_equal(fresh.L.indices, res.L.indices)
+    np.testing.assert_allclose(lp_data, fresh.L.data, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(e_data, fresh.E.data, rtol=1e-6, atol=1e-7)
+
+
+# -------------------------------------------------------------------------
+# gather-unroll knob
+# -------------------------------------------------------------------------
+def test_gather_unroll_max_k_knob_logs_and_stays_correct(caplog):
+    """A per-build cap below a slab's K must route batched gathers through
+    the fused 3-D fallback (logged at trace time) without changing
+    results."""
+    L = banded_lower(96, bandwidth=6, fill=1.0, seed=3, dtype=np.float32)
+    rng = np.random.default_rng(8)
+    B = jnp.asarray(rng.normal(size=(L.n, 4)).astype(np.float32))
+    ref = np.asarray(SpTRSV.build(L, strategy="levelset").solve(B))
+    with caplog.at_level(logging.DEBUG, logger="repro.core.codegen"):
+        s = SpTRSV.build(L, strategy="levelset", gather_unroll_max_k=2,
+                         jit=False)
+        X = np.asarray(s.solve(B))
+    assert any("falling back" in r.message for r in caplog.records)
+    np.testing.assert_allclose(X, ref, rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------------------------
+# stats surface
+# -------------------------------------------------------------------------
+def test_stats_reports_packed_bytes_and_permutation():
+    L = _lung2()
+    s = SpTRSV.build(L, strategy="levelset", coarsen=True)
+    st = s.stats()
+    assert st["permutation_applied"] and st["layout"] == "permuted"
+    assert st["packed_value_bytes"] > 0 and st["packed_index_bytes"] > 0
+    assert 0 <= st["padded_value_bytes"] < st["packed_value_bytes"]
+    assert st["refreshable_in_place"]
+    assert st["segments"] == s.schedule.num_segments
+    sc = SpTRSV.build(L, strategy="levelset", layout="scatter").stats()
+    assert not sc["permutation_applied"] and not sc["refreshable_in_place"]
+    ser = SpTRSV.build(L, strategy="serial").stats()
+    assert not ser["permutation_applied"] and ser["refreshable_in_place"]
+
+
+def test_solve_engine_refresh():
+    from repro.serve import SolveEngine
+
+    L = _lung2()
+    eng = SolveEngine.from_matrix(L, strategy="levelset")
+    rng = np.random.default_rng(12)
+    bs = [rng.standard_normal(L.n).astype(np.float32) for _ in range(3)]
+    data2 = _regen_values(L, seed=19)
+    eng.refresh(data2)
+    reqs = [eng.submit(b) for b in bs]
+    reqs.append(eng.submit(bs[0], transpose=True))
+    eng.run()
+    L2 = CSRMatrix(L.indptr, L.indices, data2, L.shape)
+    fwd, bwd = SpTRSV.build_pair(L2, strategy="levelset")
+    np.testing.assert_allclose(
+        reqs[0].x, np.asarray(fwd.solve(jnp.asarray(bs[0]))),
+        rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        reqs[-1].x, np.asarray(bwd.solve(jnp.asarray(bs[0]))),
+        rtol=1e-6, atol=1e-6)
