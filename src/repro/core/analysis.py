@@ -8,12 +8,12 @@ unroll thresholds, slab packing) and the benchmark reports.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from .csr import CSRMatrix
-from .levels import LevelSets, build_level_sets
+from .levels import LevelSets, build_level_sets, compute_critical_path
 
 __all__ = ["MatrixAnalysis", "analyze"]
 
@@ -34,6 +34,28 @@ class MatrixAnalysis:
     mem_accesses_per_level_avg: float
     solve_flops: int
     serial_fraction: float          # rows on the critical path / n
+    # weighted-critical-path thunk: the per-level propagation costs
+    # O(num_levels) Python iterations, which chain-like matrices (levels ~ n)
+    # would pay on EVERY build — so it runs lazily, on first access (the
+    # transform planner, rewrite pricing, and stats() are the consumers)
+    _cp_thunk: Optional[Callable[[], int]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _cp_cache: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def critical_path_flops(self) -> int:
+        """Weighted critical path of the dependency DAG (Böhnlein et al.) —
+        computed lazily on first access and cached."""
+        if self._cp_cache is None:
+            cp = self._cp_thunk() if self._cp_thunk is not None else 0
+            object.__setattr__(self, "_cp_cache", cp)
+        return self._cp_cache
+
+    @property
+    def critical_fraction(self) -> float:
+        """critical_path_flops / solve_flops — 1.0 for a pure chain."""
+        return self.critical_path_flops / max(self.solve_flops, 1)
 
     def report(self) -> Dict:
         return {
@@ -48,6 +70,8 @@ class MatrixAnalysis:
             "mem_accesses_per_level_avg": round(self.mem_accesses_per_level_avg, 1),
             "solve_flops": self.solve_flops,
             "serial_fraction": round(self.serial_fraction, 6),
+            "critical_path_flops": self.critical_path_flops,
+            "critical_fraction": round(self.critical_fraction, 6),
         }
 
     def pretty(self) -> str:
@@ -66,7 +90,13 @@ class MatrixAnalysis:
         }
 
 
-def analyze(L: CSRMatrix, levels: Optional[LevelSets] = None) -> MatrixAnalysis:
+def analyze(
+    L: CSRMatrix, levels: Optional[LevelSets] = None, *, upper: bool = False
+) -> MatrixAnalysis:
+    """Analyze a triangular system.  ``upper=True`` marks an
+    upper-triangular matrix (a transpose-solve system, diagonal stored
+    first) so the dependency edges of the weighted critical path point the
+    right way; every other metric is direction-agnostic."""
     if levels is None:
         levels = build_level_sets(L)
     row_nnz = L.row_nnz()
@@ -78,6 +108,7 @@ def analyze(L: CSRMatrix, levels: Optional[LevelSets] = None) -> MatrixAnalysis:
         levels.level, weights=row_nnz, minlength=levels.num_levels
     ).astype(np.int64) + 2 * counts.astype(np.int64)
     thin2 = int((counts <= 2).sum())
+    solve_flops = L.solve_flops()
     return MatrixAnalysis(
         n=L.n,
         nnz=L.nnz,
@@ -91,6 +122,7 @@ def analyze(L: CSRMatrix, levels: Optional[LevelSets] = None) -> MatrixAnalysis:
         mem_accesses_total=L.memory_accesses(),
         mem_accesses_per_level=per_level,
         mem_accesses_per_level_avg=float(per_level.mean()) if per_level.size else 0.0,
-        solve_flops=L.solve_flops(),
+        solve_flops=solve_flops,
         serial_fraction=levels.num_levels / max(L.n, 1),
+        _cp_thunk=lambda: compute_critical_path(L, levels, upper=upper),
     )

@@ -49,7 +49,9 @@ __all__ = [
     "coarsen_stats",
     "schedule_cost",
     "PlanDecision",
+    "RewriteCandidate",
     "plan_strategy",
+    "should_consider_rewrite",
     "SEGMENT_COST",
     "SUBSTEP_COST",
     "SERIAL_STEP_COST",
@@ -227,17 +229,40 @@ def coarsen_stats(before: Schedule, after: Schedule,
 
 
 # --------------------------------------------------------------------------
-# Strategy planner
+# Transform planner
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class PlanDecision:
     """Outcome of :func:`plan_strategy` — recorded on the built solver so
-    ``strategy="auto"`` choices are auditable."""
+    ``strategy="auto"`` choices are auditable.
+
+    ``strategy``  executor picked (serial / levelset / levelset_unroll /
+                  pallas_fused)
+    ``coarsen``   whether schedule coarsening is applied to the winner
+    ``rewrite``   rewrite-policy tag ("thin" / "critical_path") when the
+                  planner chose to transform the matrix first, else None
+    ``costs``     every candidate's modelled per-solve cost; transform
+                  combinations are keyed ``<strategy>+rewrite:<tag>+coarsen``
+    """
 
     strategy: str
     coarsen: bool
     reason: str
     costs: Dict[str, float]
+    rewrite: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteCandidate:
+    """A priced rewrite alternative handed to :func:`plan_strategy`: the
+    schedule of the rewritten system L', its coarsened counterpart, and the
+    modelled per-solve cost of the RHS transform ``b' = E b`` (one padded
+    ELL SpMV plus one extra dispatch) — the fill-vs-parallelism price of the
+    transformation."""
+
+    schedule: Schedule
+    coarsened: Optional[Schedule]
+    rhs_cost: float
 
 
 def schedule_cost(schedule: Schedule, *, unroll_threshold: int = 0,
@@ -256,6 +281,18 @@ def schedule_cost(schedule: Schedule, *, unroll_threshold: int = 0,
 _FUSED_VMEM_ROWS = 2_000_000
 
 
+def should_consider_rewrite(analysis: MatrixAnalysis) -> bool:
+    """Gate for pricing rewrite candidates inside ``strategy="auto"``:
+    equation rewriting targets barrier-dominated schedules with substantial
+    thin-level content (the paper's lung2 pathology).  Chain-like matrices
+    (levels ~ n) are excluded — the serial scan wins those outright and a
+    speculative rewrite of a pure chain just burns fill budget — as are
+    schedules too shallow to have barriers worth removing."""
+    return (analysis.num_levels >= 8
+            and analysis.num_levels <= 0.6 * analysis.n
+            and analysis.thin_fraction_2 >= 0.25)
+
+
 def plan_strategy(
     analysis: MatrixAnalysis,
     schedule: Schedule,
@@ -265,14 +302,24 @@ def plan_strategy(
     segment_cost: float = SEGMENT_COST,
     backend: Optional[str] = None,
     interpret: bool = True,
+    rewritten: Optional[Dict[str, RewriteCandidate]] = None,
 ) -> PlanDecision:
-    """Pick an execution strategy from the analysis + schedule cost model.
+    """Pick an execution strategy *and matrix transformation* from the
+    analysis + schedule cost model.
 
-    ``schedule`` is the uncoarsened schedule of the (possibly rewritten)
-    system; ``coarsened`` its coarsened counterpart when coarsening is on the
-    table.  The Pallas fused kernel is only a candidate on a TPU backend
-    with ``interpret=False`` — interpret mode is a correctness harness,
-    never a performance win, and the cost below models the compiled kernel.
+    ``schedule`` is the uncoarsened schedule of the untransformed system;
+    ``coarsened`` its coarsened counterpart when coarsening is on the table.
+    ``rewritten`` maps rewrite-policy tags to priced
+    :class:`RewriteCandidate` alternatives — rewriting shortens the chain
+    (fewer segments on the rewritten schedule) but pays fill (that
+    schedule's padded FLOPs) plus the per-solve RHS transform; coarsening
+    removes syncs but pays padding.  All combinations are priced with the
+    same launch-cost/padded-FLOP model, so *rewrite vs coarsen vs both* is
+    one ``min()`` over ``costs``.
+
+    The Pallas fused kernel is only a candidate on a TPU backend with
+    ``interpret=False`` — interpret mode is a correctness harness, never a
+    performance win, and the cost below models the compiled kernel.
     """
     if backend is None:
         import jax
@@ -281,31 +328,54 @@ def plan_strategy(
 
     costs: Dict[str, float] = {}
     # serial lax.scan: one segment, but every row is a latency-bound scan
-    # step whose cost grows with the carried vector size
+    # step whose cost grows with the carried vector size.  Transforms never
+    # help the scan (rewrite only adds work to it), so serial is priced on
+    # the untransformed system only.
     costs["serial"] = analysis.solve_flops + analysis.n * (
         SERIAL_STEP_COST + SERIAL_STEP_COST_SCALE * analysis.n)
-    costs["levelset"] = schedule_cost(schedule, unroll_threshold=0,
-                                      segment_cost=segment_cost)
-    costs["levelset_unroll"] = schedule_cost(
-        schedule, unroll_threshold=unroll_threshold, segment_cost=segment_cost)
-    if coarsened is not None:
-        costs["levelset+coarsen"] = schedule_cost(
-            coarsened, unroll_threshold=0, segment_cost=segment_cost)
-        costs["levelset_unroll+coarsen"] = schedule_cost(
-            coarsened, unroll_threshold=unroll_threshold,
+
+    def _levelset_costs(suffix: str, sched: Schedule,
+                        co: Optional[Schedule], extra: float) -> None:
+        costs[f"levelset{suffix}"] = extra + schedule_cost(
+            sched, unroll_threshold=0, segment_cost=segment_cost)
+        costs[f"levelset_unroll{suffix}"] = extra + schedule_cost(
+            sched, unroll_threshold=unroll_threshold,
             segment_cost=segment_cost)
-    if backend == "tpu" and not interpret and analysis.n <= _FUSED_VMEM_ROWS:
-        # whole solve in one kernel: one segment, x resident in VMEM; padded
-        # work bounded by the widest slab's K over all rows
-        kmax = max((s.K for s in schedule.slabs), default=1)
-        costs["pallas_fused"] = 2 * kmax * analysis.n + analysis.n + segment_cost
+        if co is not None:
+            costs[f"levelset{suffix}+coarsen"] = extra + schedule_cost(
+                co, unroll_threshold=0, segment_cost=segment_cost)
+            costs[f"levelset_unroll{suffix}+coarsen"] = extra + schedule_cost(
+                co, unroll_threshold=unroll_threshold,
+                segment_cost=segment_cost)
+
+    def _fused_cost(suffix: str, sched: Schedule, extra: float) -> None:
+        if backend == "tpu" and not interpret and analysis.n <= _FUSED_VMEM_ROWS:
+            # whole solve in one kernel: one segment, x resident in VMEM;
+            # padded work bounded by the widest slab's K over all rows
+            kmax = max((s.K for s in sched.slabs), default=1)
+            costs[f"pallas_fused{suffix}"] = (
+                extra + 2 * kmax * analysis.n + analysis.n + segment_cost)
+
+    _levelset_costs("", schedule, coarsened, 0.0)
+    _fused_cost("", schedule, 0.0)
+    for tag, cand in (rewritten or {}).items():
+        _levelset_costs(f"+rewrite:{tag}", cand.schedule, cand.coarsened,
+                        cand.rhs_cost)
+        _fused_cost(f"+rewrite:{tag}", cand.schedule, cand.rhs_cost)
 
     best = min(costs, key=costs.get)
-    strategy, _, tag = best.partition("+")
+    parts = best.split("+")
+    strategy = parts[0]
+    rewrite_tag = next((p[len("rewrite:"):] for p in parts
+                        if p.startswith("rewrite:")), None)
     decision = PlanDecision(
         strategy=strategy,
-        coarsen=(tag == "coarsen"),
+        coarsen="coarsen" in parts,
+        rewrite=rewrite_tag,
         reason=(
+            # critical_fraction is deliberately NOT formatted here: it is a
+            # lazy O(num_levels) computation and the reason line is built on
+            # every auto plan, chains included
             f"min modelled cost {costs[best]:.0f} among "
             + ", ".join(f"{k}={v:.0f}" for k, v in sorted(costs.items()))
             + f" (n={analysis.n}, levels={analysis.num_levels}, "

@@ -572,10 +572,13 @@ def make_levelset_solver(
     return solve
 
 
-def make_rhs_transform(res: RewriteResult) -> Callable[[jnp.ndarray], jnp.ndarray]:
+def make_rhs_transform(res: RewriteResult) -> Optional[Callable]:
     """b' = E b — the per-solve RHS update of the rewriting method, as one
     fully-parallel ELL SpMV.  For a batch ``B: (n, m)`` this is a single
-    batched SpMV ``B' = E B`` (not m separate ones)."""
+    batched SpMV ``B' = E B`` (not m separate ones).  Returns ``None`` when
+    E is the identity (no rewrites survived the budgets)."""
+    if res.stats.e_nnz_offdiag == 0:
+        return None
     ell = build_ell(res.E)
 
     def transform(b: jnp.ndarray) -> jnp.ndarray:

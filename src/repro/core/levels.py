@@ -16,11 +16,15 @@ from .csr import CSRMatrix
 
 __all__ = [
     "LevelSets",
+    "Criticality",
     "compute_levels",
     "compute_reverse_levels",
     "compute_upper_levels",
     "build_level_sets",
     "build_reverse_level_sets",
+    "solve_weights",
+    "compute_critical_path",
+    "compute_criticality",
 ]
 
 
@@ -59,6 +63,48 @@ def _propagate_levels(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
         # dedupe before it becomes a frontier node
         frontier = np.unique(targets[indeg[targets] == 0])
     return level
+
+
+def _propagate_weighted(
+    n: int, src: np.ndarray, dst: np.ndarray, w: np.ndarray
+) -> np.ndarray:
+    """Weighted longest-path accumulation over the DAG with edges
+    ``src -> dst``: ``cp[i] = w[i] + max(cp[deps(i)], default 0)``.
+
+    Same per-wavefront vectorization as :func:`_propagate_levels` (each edge
+    touched once, O(nnz + n) total); with unit weights this reduces to
+    ``level + 1``.  This is the quantity Böhnlein et al. show actually bounds
+    parallel solve time — the *weighted critical path* — as opposed to the
+    raw level count."""
+    w = np.asarray(w, dtype=np.int64)
+    cp = w.copy()
+    if src.size == 0:
+        return cp
+    indeg = np.bincount(dst, minlength=n)
+    cnt_src = np.bincount(src, minlength=n)
+    outptr = np.concatenate([[0], np.cumsum(cnt_src)])
+    dst_sorted = dst[np.argsort(src, kind="stable")]
+    frontier = np.nonzero(indeg == 0)[0]
+    while frontier.size:
+        starts = outptr[frontier]
+        cnt = outptr[frontier + 1] - starts
+        total = int(cnt.sum())
+        if total == 0:
+            break
+        off = np.cumsum(cnt) - cnt
+        pos = np.repeat(starts - off, cnt) + np.arange(total)
+        targets = dst_sorted[pos]
+        np.maximum.at(cp, targets,
+                      np.repeat(cp[frontier], cnt) + w[targets])
+        np.subtract.at(indeg, targets, 1)
+        frontier = np.unique(targets[indeg[targets] == 0])
+    return cp
+
+
+def solve_weights(M: CSRMatrix) -> np.ndarray:
+    """Per-row substitution cost in FLOPs (mul+sub per off-diagonal nonzero,
+    one divide) — the default weights of the weighted critical path."""
+    return (2 * (M.row_nnz() - 1) + 1).astype(np.int64)
 
 
 def _edge_arrays(M: CSRMatrix, *, upper: bool) -> tuple[np.ndarray, np.ndarray]:
@@ -185,6 +231,137 @@ def build_level_sets(L: CSRMatrix, level: np.ndarray | None = None) -> LevelSets
         rows.append(np.sort(order[off : off + c]))
         off += c
     return LevelSets(level=level, rows=rows, counts=counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Criticality:
+    """Weighted longest-chain membership of every row (Böhnlein et al.:
+    the *weighted critical path* of DAG_L bounds parallel solve time, not
+    the level count).
+
+    ``cp_in``   (n,) weight of the heaviest dependency chain ENDING at each
+                row (row's own weight included)
+    ``cp_out``  (n,) weight of the heaviest chain STARTING at each row
+    ``weights`` (n,) per-row weights used (default: row solve FLOPs)
+
+    ``through(i) = cp_in[i] + cp_out[i] - weights[i]`` is the heaviest
+    complete chain passing through row ``i``; rows with
+    ``critical_path - through(i) <= slack`` lie on (near-)critical chains —
+    exactly the rows whose equation rewriting shortens the bound.
+    """
+
+    cp_in: np.ndarray
+    cp_out: np.ndarray
+    weights: np.ndarray
+
+    @property
+    def critical_path(self) -> int:
+        return int(self.cp_in.max()) if self.cp_in.size else 0
+
+    def through(self) -> np.ndarray:
+        return self.cp_in + self.cp_out - self.weights
+
+    def slack(self) -> np.ndarray:
+        return self.critical_path - self.through()
+
+    def near_critical(self, slack_fraction: float = 0.05) -> np.ndarray:
+        """Rows whose heaviest through-chain is within ``slack_fraction`` of
+        the critical path — the rewrite targets of ``policy="critical_path"``."""
+        if not self.cp_in.size:
+            return np.zeros(0, dtype=bool)
+        return self.slack() <= slack_fraction * self.critical_path
+
+
+def _offdiag_entries(M: CSRMatrix, rows: np.ndarray, upper: bool):
+    """Positions of the off-diagonal (dependency) entries of ``rows`` plus
+    per-row counts — the diagonal is stored last (lower) or first (upper),
+    so the dependency span of every row is one contiguous slice.  Rows
+    without a stored diagonal (degenerate inputs) count as dependency-free
+    rather than producing negative spans."""
+    lo = M.indptr[rows] + (1 if upper else 0)
+    ln = np.maximum((M.indptr[rows + 1] - M.indptr[rows]) - 1, 0)
+    total = int(ln.sum())
+    off = np.cumsum(ln) - ln
+    pos = np.repeat(lo - off, ln) + np.arange(total)
+    return pos, ln
+
+
+def _cp_in_from_levels(
+    M: CSRMatrix, levels: "LevelSets", w: np.ndarray, *, upper: bool = False
+) -> np.ndarray:
+    """``cp_in`` computed one level set at a time: one gather +
+    ``maximum.reduceat`` per wavefront — no edge-list sort, no in-degree
+    bookkeeping.  The fast path when level sets already exist (they always
+    do inside the rewrite/planner)."""
+    cp = np.asarray(w, np.int64).copy()
+    for rows in levels.rows[1:]:
+        pos, ln = _offdiag_entries(M, rows, upper)
+        has = ln > 0
+        if not has.any():
+            continue
+        starts = (np.cumsum(ln) - ln)[has]
+        best = np.maximum.reduceat(cp[M.indices[pos]], starts)
+        r = rows[has]
+        cp[r] = w[r] + best
+    return cp
+
+
+def _cp_out_from_levels(
+    M: CSRMatrix, levels: "LevelSets", w: np.ndarray, *, upper: bool = False
+) -> np.ndarray:
+    """``cp_out`` by sweeping level sets highest-first and scattering each
+    row's settled chain weight onto its dependencies (every consumer of a
+    row lives in a strictly higher level, so it is settled first)."""
+    cp = np.asarray(w, np.int64).copy()
+    for rows in reversed(levels.rows[1:]):
+        pos, ln = _offdiag_entries(M, rows, upper)
+        cols = M.indices[pos]
+        np.maximum.at(cp, cols, np.repeat(cp[rows], ln) + w[cols])
+    return cp
+
+
+def compute_criticality(
+    M: CSRMatrix,
+    levels: "LevelSets | None" = None,
+    *,
+    upper: bool = False,
+    weights: np.ndarray | None = None,
+) -> Criticality:
+    """Weighted criticality of every row of a triangular system.  With
+    ``levels`` given, both directions run as per-level-set reductions (the
+    fast path); otherwise two generic wavefront propagations."""
+    w = solve_weights(M) if weights is None else np.asarray(weights, np.int64)
+    if levels is not None:
+        return Criticality(
+            cp_in=_cp_in_from_levels(M, levels, w, upper=upper),
+            cp_out=_cp_out_from_levels(M, levels, w, upper=upper),
+            weights=w,
+        )
+    src, dst = _edge_arrays(M, upper=upper)
+    return Criticality(
+        cp_in=_propagate_weighted(M.n, src, dst, w),
+        cp_out=_propagate_weighted(M.n, dst, src, w),
+        weights=w,
+    )
+
+
+def compute_critical_path(
+    M: CSRMatrix,
+    levels: "LevelSets | None" = None,
+    *,
+    upper: bool = False,
+    weights: np.ndarray | None = None,
+) -> int:
+    """Weighted critical path of the substitution DAG (one forward
+    propagation — cheaper than :func:`compute_criticality` when only the
+    scalar bound is needed, e.g. by :func:`repro.core.analysis.analyze`)."""
+    if M.n == 0:
+        return 0
+    w = solve_weights(M) if weights is None else np.asarray(weights, np.int64)
+    if levels is not None:
+        return int(_cp_in_from_levels(M, levels, w, upper=upper).max())
+    src, dst = _edge_arrays(M, upper=upper)
+    return int(_propagate_weighted(M.n, src, dst, w).max())
 
 
 def build_reverse_level_sets(

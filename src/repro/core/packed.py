@@ -410,7 +410,12 @@ def make_packed_rhs_transform(res: RewriteResult):
 
     Returns ``(transform(b, e_vals), e_vals0, repack)`` where
     ``repack(e_data)`` re-packs new E values (from
-    :func:`repro.core.rewrite.replay_rewrite_values`) into the buffer."""
+    :func:`repro.core.rewrite.replay_rewrite_values`) into the buffer.
+    When E is the identity (no rewrites survived the budgets) returns
+    ``(None, None, None)`` — a no-op SpMV would still cost a dispatch and a
+    packed buffer per solve."""
+    if res.stats.e_nnz_offdiag == 0:
+        return None, None, None
     ell = build_ell(res.E)
     cols = jnp.asarray(ell.cols)
     src = ell.val_src

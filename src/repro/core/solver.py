@@ -32,9 +32,36 @@ levelset_unroll    yes         yes        yes        yes        yes        yes  
 pallas_level       yes         yes        yes        yes        yes        yes        no
 pallas_fused       yes         yes        yes        yes        n/a (1 seg) yes       no
 distributed        yes         yes        yes        yes        yes        yes        yes (mesh axis)
-auto               planner: picks serial / levelset / levelset_unroll /
-                   pallas_fused from the analysis + schedule cost model
+auto               transform planner: picks serial / levelset /
+                   levelset_unroll / pallas_fused AND the matrix transform
+                   (rewrite policy x coarsening) from one cost model
 =================  ==========  =========  =========  =========  =========  =========  ============
+
+Transform planner (``strategy="auto"``)
+---------------------------------------
+``plan_strategy`` (:mod:`repro.core.coarsen`) prices *rewrite vs coarsen vs
+both* with one launch-cost/padded-FLOP model: rewriting shortens the
+dependency chain but adds fill and a per-solve RHS SpMV; coarsening removes
+syncs but pads.  Candidate rewrites (``policy="thin"`` and
+``policy="critical_path"``) are actually built — the vectorized rewrite
+engine makes that a milliseconds-scale probe — and their schedules priced
+like every other alternative.  The decision is recorded on ``solver.plan``
+(:class:`repro.core.coarsen.PlanDecision`):
+
+``plan.strategy``   executor chosen (``serial``/``levelset``/
+                    ``levelset_unroll``/``pallas_fused``)
+``plan.coarsen``    whether schedule coarsening is applied
+``plan.rewrite``    winning rewrite-policy tag (``"thin"`` /
+                    ``"critical_path"``) or ``None`` for no rewrite
+``plan.costs``      modelled per-solve cost of every candidate, keyed
+                    ``<strategy>[+rewrite:<tag>][+coarsen]``
+``plan.reason``     human-readable audit line (also in ``stats()["plan"]``)
+
+An explicit ``rewrite=RewriteConfig(...)`` is a user directive: the rewrite
+is applied unconditionally and the planner only weighs strategy/coarsening
+on the transformed system.  ``SolveEngine.from_matrix`` serves the planner
+decision by default, and the chosen transform composes with permuted/packed
+layout, transpose pairs, batching, and value-only refresh.
 
 Permuted layout + value-only refresh (``layout=``, ``refresh``)
 ---------------------------------------------------------------
@@ -62,11 +89,14 @@ Strategies
                    per *segment* — rewriting and coarsening both reduce
                    collective count; a batch multiplies collective payload,
                    not count)
-``auto``           cost-model planner (:func:`repro.core.coarsen.plan_strategy`):
+``auto``           transform planner (:func:`repro.core.coarsen.plan_strategy`):
                    serial for chain-like DAGs, (coarsened) level-set
                    executors for wavefront-parallel matrices, the fused
-                   Pallas kernel for VMEM-sized systems on a real TPU.  The
-                   decision is recorded on ``solver.plan``.
+                   Pallas kernel for VMEM-sized systems on a real TPU —
+                   and, for barrier-dominated schedules, whether to rewrite
+                   the matrix first (``thin`` vs ``critical_path`` policy)
+                   under the same cost model.  The decision is recorded on
+                   ``solver.plan`` (see "Transform planner" above).
 
 Schedule coarsening (``coarsen=...``)
 -------------------------------------
@@ -105,7 +135,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .analysis import MatrixAnalysis, analyze
-from .coarsen import CoarsenConfig, PlanDecision, coarsen_schedule, plan_strategy
+from .coarsen import (
+    SEGMENT_COST,
+    CoarsenConfig,
+    PlanDecision,
+    RewriteCandidate,
+    coarsen_schedule,
+    plan_strategy,
+    should_consider_rewrite,
+)
 from .codegen import (
     GATHER_UNROLL_MAX_K,
     Schedule,
@@ -338,7 +376,7 @@ class SpTRSV:
         )
         if source is None:
             source, values_map = system, None
-        analysis = analyze(system, levels)
+        analysis = analyze(system, levels, upper=upper)
         ccfg = _as_coarsen_config(coarsen)
 
         rres: Optional[RewriteResult] = None
@@ -347,11 +385,10 @@ class SpTRSV:
         e_repack = None
         target, target_levels = system, levels
         if rewrite is not None:
+            # an explicit rewrite config is a user directive — applied
+            # unconditionally; the auto planner then prices strategies on
+            # the transformed system (and only weighs coarsening)
             rres = rewrite_matrix(system, levels, rewrite, upper=upper)
-            if layout == "permuted":
-                rhs_fn, e_values, e_repack = make_packed_rhs_transform(rres)
-            else:
-                rhs_fn = make_rhs_transform(rres)
             target, target_levels = rres.L, rres.levels
 
         _memo: dict = {}
@@ -377,11 +414,48 @@ class SpTRSV:
             # let the planner weigh coarsening unless explicitly disabled
             plan_ccfg = ccfg if ccfg is not None else (
                 None if coarsen is False else CoarsenConfig())
+            # Price rewrite candidates (the transform planner): only when the
+            # user left the rewrite choice open and the analysis says the
+            # schedule is barrier-dominated enough for rewriting to plausibly
+            # pay.  Candidates run the (vectorized, milliseconds-scale)
+            # rewrite and schedule build so they are priced with the same
+            # launch-cost/padded-FLOP model as everything else.
+            cands: dict = {}
+            cand_artifacts: dict = {}
+            if rewrite is None and should_consider_rewrite(analysis):
+                for policy in ("thin", "critical_path"):
+                    cfg_r = RewriteConfig(policy=policy)
+                    rr = rewrite_matrix(system, levels, cfg_r, upper=upper)
+                    if rr.stats.rows_rewritten == 0:
+                        continue
+                    sched_r = build_schedule(
+                        rr.L, rr.levels, upper=upper,
+                        bucket_pad_ratio=bucket_pad_ratio)
+                    co_r = (coarsen_schedule(sched_r, plan_ccfg,
+                                             unroll_threshold=unroll_threshold)
+                            if plan_ccfg is not None else None)
+                    # per-solve price of b' = E b: one padded ELL SpMV plus
+                    # one extra dispatch
+                    k_e = int(np.diff(rr.E.indptr).max())
+                    cands[policy] = RewriteCandidate(
+                        schedule=sched_r, coarsened=co_r,
+                        rhs_cost=2.0 * k_e * system.n + SEGMENT_COST)
+                    cand_artifacts[policy] = (cfg_r, rr, sched_r, co_r)
             plan = plan_strategy(
                 analysis, _schedule(),
                 _coarsened(plan_ccfg) if plan_ccfg is not None else None,
-                unroll_threshold=unroll_threshold, interpret=interpret)
+                unroll_threshold=unroll_threshold, interpret=interpret,
+                rewritten=cands or None)
             strategy = plan.strategy
+            if plan.rewrite is not None:
+                # adopt the winning rewrite: its result and schedules were
+                # already built for pricing — no recompute
+                _, rres, sched_r, co_r = cand_artifacts[plan.rewrite]
+                target, target_levels = rres.L, rres.levels
+                _memo.clear()
+                _memo["base"] = sched_r
+                if co_r is not None:
+                    _memo["coarse"] = co_r
             if ccfg is not None and strategy in ("levelset", "levelset_unroll"):
                 # an explicit coarsen config is a user directive — coarsening
                 # stays on even if the planner costed it out; record what
@@ -389,6 +463,15 @@ class SpTRSV:
                 plan = dataclasses.replace(plan, coarsen=True)
             elif plan.coarsen:
                 ccfg = plan_ccfg
+
+        if rres is not None and rres.stats.e_nnz_offdiag > 0:
+            # the per-solve RHS transform b' = E b; skipped outright when E
+            # is the identity (no rewrites survived the budgets) so no-op
+            # transforms cost nothing per solve
+            if layout == "permuted":
+                rhs_fn, e_values, e_repack = make_packed_rhs_transform(rres)
+            else:
+                rhs_fn = make_rhs_transform(rres)
 
         def _maybe_coarsen(schedule: Schedule) -> Schedule:
             return _coarsened(ccfg) if ccfg is not None else schedule
@@ -657,5 +740,11 @@ class SpTRSV:
                                      and self._refresh_ctx.repack is not None),
             "rewrite": (self.rewrite_result.stats.summary()
                         if self.rewrite_result else None),
+            "rewrite_policy": (self.rewrite_result.stats.policy
+                               if self.rewrite_result else None),
+            "critical_path_flops": self.analysis.critical_path_flops,
             "plan": self.plan.reason if self.plan else None,
+            "planned_transform": (
+                {"rewrite": self.plan.rewrite, "coarsen": self.plan.coarsen}
+                if self.plan else None),
         }

@@ -34,6 +34,14 @@ __all__ = ["fused_kernel", "fused_solve", "fused_kernel_batched",
            "fused_solve_batched"]
 
 
+def _chunk_start(c, C):
+    """Dynamic store offset in the platform's default integer dtype.
+    ``program_id`` is int32; with jax_enable_x64 the other index components
+    of a multi-axis ``pl.store`` default to int64, and interpret-mode
+    ``dynamic_slice`` rejects mixed index dtypes."""
+    return (c * C).astype(jnp.asarray(0).dtype)
+
+
 def fused_kernel(bl_ref, cols_ref, vals_ref, diag_ref, out_ref, x_scr):
     """Grid step = one chunk of C rows inside a single level.
 
@@ -54,8 +62,9 @@ def fused_kernel(bl_ref, cols_ref, vals_ref, diag_ref, out_ref, x_scr):
         acc = acc - vals_ref[k, :] * jnp.take(x, cols_ref[k, :], mode="clip")
     xl = acc / diag_ref[...]
     # contiguous dynamic-offset store — no scatter needed
-    pl.store(x_scr, (pl.dslice(c * C, C),), xl)
-    pl.store(out_ref, (pl.dslice(c * C, C),), xl)
+    start = _chunk_start(c, C)
+    pl.store(x_scr, (pl.dslice(start, C),), xl)
+    pl.store(out_ref, (pl.dslice(start, C),), xl)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -114,8 +123,9 @@ def fused_kernel_batched(bl_ref, cols_ref, vals_ref, diag_ref, out_ref, x_scr):
         acc = acc - vals_ref[k, :][:, None] * dep
     xl = acc / diag_ref[...][:, None]
     # contiguous dynamic-offset store along rows — no scatter needed
-    pl.store(x_scr, (pl.dslice(c * C, C), slice(None)), xl)
-    pl.store(out_ref, (pl.dslice(c * C, C), slice(None)), xl)
+    start = _chunk_start(c, C)
+    pl.store(x_scr, (pl.dslice(start, C), slice(None)), xl)
+    pl.store(out_ref, (pl.dslice(start, C), slice(None)), xl)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

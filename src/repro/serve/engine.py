@@ -179,13 +179,15 @@ class SolveEngine:
                     max_batch: int = 64, bucket_base: int = 2, **build_kwargs):
         """Stand up a serving engine straight from a factor.
 
-        Defaults to ``strategy="auto"`` — the cost-model planner picks the
-        executor (and whether to coarsen the schedule) per matrix, which is
-        the right default for a serving tier that sees arbitrary factors.
-        ``transpose_too=True`` builds the backward solver from the same
-        shared analysis (``SpTRSV.build_pair``) so transpose requests are
-        servable.  Extra keyword arguments (``rewrite=``, ``coarsen=``,
-        ``bucket_pad_ratio=``, ...) pass through to the builder."""
+        Defaults to ``strategy="auto"`` — the transform planner picks the
+        executor, whether to coarsen the schedule, AND whether to rewrite
+        the matrix first (``thin`` vs ``critical_path`` policy) per matrix,
+        which is the right default for a serving tier that sees arbitrary
+        factors.  ``transpose_too=True`` builds the backward solver from the
+        same shared analysis (``SpTRSV.build_pair``) so transpose requests
+        are servable.  Extra keyword arguments (``rewrite=``, ``coarsen=``,
+        ``bucket_pad_ratio=``, ...) pass through to the builder; an explicit
+        ``rewrite=`` overrides the planner's transform choice."""
         from repro.core import SpTRSV
 
         if transpose_too:
@@ -193,6 +195,20 @@ class SolveEngine:
         else:
             fwd, bwd = SpTRSV.build(L, strategy=strategy, **build_kwargs), None
         return cls(fwd, bwd, max_batch=max_batch, bucket_base=bucket_base)
+
+    def stats(self) -> dict:
+        """Serving-tier view of the engine: per-direction solver stats
+        (strategy, layout, packed bytes, rewrite policy, planner decision —
+        see ``SpTRSV.stats``) plus queue/batch counters, so a deployment
+        dashboard reads one dict instead of poking solver internals."""
+        return {
+            "forward": self.solver.stats(),
+            "backward": self.solver_t.stats() if self.solver_t else None,
+            "queue_depth": len(self.queue),
+            "solved": self.solved,
+            "batches": self.batches,
+            "max_batch": self.max_batch,
+        }
 
     def refresh(self, new_values) -> "SolveEngine":
         """Value-only numeric refresh of the engine's factor: new ``data``

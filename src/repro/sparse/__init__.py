@@ -6,6 +6,7 @@ from .generate import (
     poisson2d,
     random_lower,
 )
+from .pathological import PATHOLOGICAL_PATTERNS, diag_condition, pathological
 
 __all__ = [
     "banded_lower",
@@ -14,4 +15,7 @@ __all__ = [
     "lung2_like",
     "poisson2d",
     "random_lower",
+    "PATHOLOGICAL_PATTERNS",
+    "diag_condition",
+    "pathological",
 ]

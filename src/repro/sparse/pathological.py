@@ -1,0 +1,142 @@
+"""Pathological triangular patterns for the differential fuzz harness.
+
+Each generator is seeded and deterministic, and targets a structural corner
+the regular suite's matrices do not reach:
+
+``arrow``           column 0 dense + a dense last row: two-level DAG with one
+                    maximal-fan-in row (K spans the whole matrix)
+``dense_last_row``  identity apart from one dense final row — the widest
+                    possible single-slab gather over an otherwise empty DAG
+``bidiag_chain``    strict bidiagonal chain with random skip links: maximal
+                    level count, 1-row levels (serial worst case)
+``singleton_ladder``interleaved 1-row chains of random length anchored at
+                    random earlier rows — runs of singleton levels, the
+                    degenerate thin-level shape below even lung2's pairs
+``power_law``       row degree ~ Zipf, preferential attachment to low ids:
+                    a few huge rows over a mostly-sparse DAG (bucketing and
+                    gather-unroll stress)
+``near_singular``   diagonal magnitudes log-uniform over ~9 decades with a
+                    few entries at the pivot-tolerance floor — conditioning
+                    and pivot-skip stress
+
+All are lower-triangular with nonzero diagonals (solvable); ``near_singular``
+is ill-conditioned by design, so comparisons against an oracle must scale
+tolerance by the diagonal spread (see ``diag_condition``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSRMatrix, from_coo
+
+__all__ = ["PATHOLOGICAL_PATTERNS", "pathological", "diag_condition"]
+
+
+def _finalize(rows, cols, vals, n, dtype):
+    return from_coo(rows, cols, np.asarray(vals, dtype=dtype), (n, n))
+
+
+def _arrow(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows = list(range(n)) + list(range(1, n - 1)) + [n - 1] * (n - 1)
+    cols = list(range(n)) + [0] * (n - 2) + list(range(n - 1))
+    vals = ([4.0 + rng.random()] + list(4.0 + rng.random(n - 1))
+            + list(rng.normal(size=n - 2) * 0.3)
+            + list(rng.normal(size=n - 1) * 0.1))
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _dense_last_row(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows = list(range(n)) + [n - 1] * (n - 1)
+    cols = list(range(n)) + list(range(n - 1))
+    vals = list(4.0 + rng.random(n)) + list(rng.normal(size=n - 1) * 0.2)
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _bidiag_chain(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows = list(range(n)) + list(range(1, n))
+    cols = list(range(n)) + list(range(n - 1))
+    vals = list(4.0 + rng.random(n)) + list(rng.normal(size=n - 1) * 0.5)
+    # occasional skip link back to a random ancestor
+    for i in range(2, n):
+        if rng.random() < 0.2:
+            j = int(rng.integers(0, i - 1))
+            rows.append(i)
+            cols.append(j)
+            vals.append(rng.normal() * 0.2)
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _singleton_ladder(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows, cols, vals = list(range(n)), list(range(n)), list(4.0 + rng.random(n))
+    i = 1
+    while i < n:
+        length = int(rng.integers(2, 9))
+        anchor = int(rng.integers(0, i))
+        prev = anchor
+        for _ in range(length):
+            if i >= n:
+                break
+            rows.append(i)
+            cols.append(prev)
+            vals.append(rng.normal() * 0.4)
+            prev = i
+            i += 1
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _power_law(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows, cols, vals = list(range(n)), list(range(n)), list(4.0 + rng.random(n))
+    for i in range(1, n):
+        k = min(i, int(rng.zipf(1.6)))
+        if k <= 0:
+            continue
+        # preferential attachment to low row ids (power-law in-degree too)
+        deps = np.unique(
+            (rng.random(k) ** 2 * i).astype(np.int64).clip(0, i - 1))
+        for j in deps:
+            rows.append(i)
+            cols.append(int(j))
+            vals.append(rng.normal() * 0.25)
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _near_singular(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    rows, cols = list(range(n)), list(range(n))
+    # diagonal magnitudes spread over ~9 decades, a few pinned at the floor
+    expo = rng.uniform(-6.0, 3.0, size=n)
+    expo[rng.integers(0, n, size=max(1, n // 50))] = -6.0
+    diag = (10.0 ** expo) * np.where(rng.random(n) < 0.5, -1.0, 1.0)
+    vals = list(diag)
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, int(rng.integers(1, 4))),
+                            replace=False):
+            rows.append(i)
+            cols.append(int(j))
+            # off-diagonals scaled to the row's diagonal keep the system
+            # solvable but heavily graded
+            vals.append(rng.normal() * 0.3 * abs(diag[i]))
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+PATHOLOGICAL_PATTERNS = {
+    "arrow": _arrow,
+    "dense_last_row": _dense_last_row,
+    "bidiag_chain": _bidiag_chain,
+    "singleton_ladder": _singleton_ladder,
+    "power_law": _power_law,
+    "near_singular": _near_singular,
+}
+
+
+def pathological(kind: str, n: int = 96, seed: int = 0,
+                 dtype=np.float64) -> CSRMatrix:
+    """Build the named pathological pattern (see module docstring)."""
+    gen = PATHOLOGICAL_PATTERNS[kind]
+    return gen(n, np.random.default_rng(seed), dtype).validate()
+
+
+def diag_condition(L: CSRMatrix) -> float:
+    """max|diag| / min|diag| — a cheap lower bound on the triangular
+    condition number, used to scale fuzz tolerances for ``near_singular``."""
+    d = np.abs(L.diagonal())
+    return float(d.max() / d.min())

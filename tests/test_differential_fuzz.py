@@ -1,0 +1,156 @@
+"""Differential fuzz harness: pathological triangular patterns through every
+strategy × rewrite-policy × layout × transpose × batch combination against a
+NumPy (dense ``np.linalg.solve``) oracle at few-ulp tolerance.
+
+Two tiers:
+
+* the default (tier-1) run sweeps a deterministic rotating slice of the
+  combination grid per pattern — every grid dimension is exercised on every
+  CI run, in bounded time;
+* ``pytest -m fuzz`` (the nightly job) runs the exhaustive grid — including
+  the distributed strategy — over ``FUZZ_SEEDS`` seeds per pattern
+  (default 3; the nightly sets a larger budget).
+
+Any failing configuration dumps the matrix + combination to an ``.npz``
+repro file (``FUZZ_REPRO_DIR``, default ``tests/_fuzz_repro``) and names the
+file in the assertion message, so a nightly failure is replayable without
+re-deriving the random state.
+
+Tolerances: solutions are compared in float64.  For well-conditioned
+patterns the bound is a few ulp (scaled by the oracle's magnitude);
+``near_singular`` spreads its diagonal over ~9 decades, where forward error
+against an oracle is not the right criterion — it asserts the componentwise
+residual bound ``|L x - b| <= tol * (|L| |x| + |b|)`` instead (the backward
+stability test substitution actually satisfies).
+"""
+import itertools
+import json
+import os
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.compat import enable_x64
+from repro.core import RewriteConfig, SpTRSV
+from repro.sparse import PATHOLOGICAL_PATTERNS, pathological
+
+STRATEGIES = ["serial", "levelset", "levelset_unroll",
+              "pallas_level", "pallas_fused"]
+POLICIES = {
+    "none": None,
+    "thin": RewriteConfig(thin_threshold=2),
+    "critical_path": RewriteConfig(policy="critical_path"),
+}
+LAYOUTS = ["permuted", "scatter"]
+PATTERNS = sorted(PATHOLOGICAL_PATTERNS)
+
+# (strategy, policy, layout, transpose, batch) — the full local grid
+GRID = list(itertools.product(STRATEGIES, sorted(POLICIES), LAYOUTS,
+                              [False, True], [0, 3]))
+# tier-1 rotating slice: stride through the grid with a per-pattern phase so
+# every dimension value appears every run, but each pattern only builds ~7
+# solver variants (full grid x all patterns is the nightly's job)
+_STRIDE = 17
+
+
+def _combos_for(pattern: str, exhaustive: bool):
+    if exhaustive:
+        return GRID
+    phase = PATTERNS.index(pattern)
+    return GRID[phase::_STRIDE]
+
+
+def _oracle(L, b, transpose):
+    A = L.to_dense()
+    return np.linalg.solve(A.T if transpose else A, b)
+
+
+def _dump_repro(L, pattern, seed, combo, err_msg):
+    out_dir = pathlib.Path(os.environ.get(
+        "FUZZ_REPRO_DIR", pathlib.Path(__file__).parent / "_fuzz_repro"))
+    out_dir.mkdir(parents=True, exist_ok=True)
+    strategy, policy, layout, transpose, batch = combo
+    name = f"{pattern}_s{seed}_{strategy}_{policy}_{layout}" \
+           f"_t{int(transpose)}_b{batch}.npz"
+    path = out_dir / name
+    np.savez(path, indptr=L.indptr, indices=L.indices, data=L.data,
+             shape=np.asarray(L.shape),
+             combo=json.dumps({"pattern": pattern, "seed": seed,
+                               "strategy": strategy, "policy": policy,
+                               "layout": layout, "transpose": transpose,
+                               "batch": batch, "error": err_msg}))
+    return path
+
+
+def _check(L, pattern, x, b, x_ref, transpose, combo, seed):
+    x = np.asarray(x)
+    assert x.shape == x_ref.shape
+    try:
+        assert np.isfinite(x).all(), "non-finite entries in solution"
+        if pattern == "near_singular":
+            # componentwise backward-error bound: |A x - b| <= tol (|A||x| + |b|)
+            A = L.to_dense()
+            if transpose:
+                A = A.T
+            resid = np.abs(A @ x - b)
+            bound = np.abs(A) @ np.abs(x) + np.abs(b)
+            tol = 256 * L.n * np.finfo(np.float64).eps
+            worst = (resid / np.maximum(bound, 1e-300)).max()
+            assert worst <= tol, f"residual {worst:.2e} > {tol:.2e}"
+        else:
+            scale = max(np.abs(x_ref).max(), 1.0)
+            np.testing.assert_allclose(x, x_ref, rtol=5e-12,
+                                       atol=5e-12 * scale)
+    except AssertionError as err:
+        path = _dump_repro(L, pattern, seed, combo, str(err))
+        raise AssertionError(
+            f"differential mismatch for {combo} on {pattern}(seed={seed}) "
+            f"— repro dumped to {path}\n{err}") from None
+
+
+def _run_combo(L, pattern, seed, combo, mesh=None):
+    strategy, policy, layout, transpose, batch = combo
+    kw = dict(strategy=strategy, layout=layout, transpose=transpose,
+              rewrite=POLICIES[policy])
+    if strategy == "distributed":
+        kw["mesh"] = mesh
+    s = SpTRSV.build(L, **kw)
+    rng = np.random.default_rng(10_000 + seed)
+    if batch:
+        b = rng.standard_normal((L.n, batch))
+    else:
+        b = rng.standard_normal(L.n)
+    x = s.solve(jnp.asarray(b))
+    _check(L, pattern, x, b, _oracle(L, b, transpose), transpose, combo, seed)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_differential_slice(pattern):
+    """Tier-1: rotating slice of the grid on one seed per pattern."""
+    L = pathological(pattern, n=72, seed=1)
+    with enable_x64():
+        for combo in _combos_for(pattern, exhaustive=False):
+            _run_combo(L, pattern, 1, combo)
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_differential_exhaustive(pattern):
+    """Nightly: the full strategy × policy × layout × transpose × batch grid
+    (distributed included) over FUZZ_SEEDS seeds."""
+    import jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    seeds = int(os.environ.get("FUZZ_SEEDS", "3"))
+    with enable_x64():
+        for seed in range(seeds):
+            L = pathological(pattern, n=96, seed=seed)
+            for combo in GRID:
+                _run_combo(L, pattern, seed, combo)
+            for combo in itertools.product(
+                    ["distributed"], sorted(POLICIES), LAYOUTS,
+                    [False, True], [0, 3]):
+                _run_combo(L, pattern, seed, combo, mesh=mesh)
