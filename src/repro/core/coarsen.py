@@ -50,6 +50,7 @@ __all__ = [
     "schedule_cost",
     "PlanDecision",
     "RewriteCandidate",
+    "SweepCandidate",
     "plan_strategy",
     "should_consider_rewrite",
     "SEGMENT_COST",
@@ -237,12 +238,14 @@ class PlanDecision:
     ``strategy="auto"`` choices are auditable.
 
     ``strategy``  executor picked (serial / levelset / levelset_unroll /
-                  pallas_fused)
+                  pallas_fused / sweep)
     ``coarsen``   whether schedule coarsening is applied to the winner
     ``rewrite``   rewrite-policy tag ("thin" / "critical_path") when the
                   planner chose to transform the matrix first, else None
     ``costs``     every candidate's modelled per-solve cost; transform
                   combinations are keyed ``<strategy>+rewrite:<tag>+coarsen``
+    ``sweep_k``   planned sweep count when the sync-free speculative
+                  executor won (``strategy == "sweep"``), else None
     """
 
     strategy: str
@@ -250,6 +253,7 @@ class PlanDecision:
     reason: str
     costs: Dict[str, float]
     rewrite: Optional[str] = None
+    sweep_k: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +267,24 @@ class RewriteCandidate:
     schedule: Schedule
     coarsened: Optional[Schedule]
     rhs_cost: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCandidate:
+    """A priced sync-free sweep alternative handed to :func:`plan_strategy`.
+
+    ``k`` is the sweep count the convergence model certifies
+    (:func:`repro.core.sweep.planned_sweeps` — ``min(depth, ⌈log tol /
+    log q⌉)`` capped at the configured budget; the caller passes a candidate
+    only when that bound lands).  ``ell_k`` is the off-diagonal ELL lane
+    width of the whole-matrix ``D + N`` split, ``contraction`` the factor
+    ``q = ‖D⁻¹N‖_∞`` — recorded so the decision's reason line is
+    auditable."""
+
+    k: int
+    ell_k: int
+    n: int
+    contraction: float
 
 
 def schedule_cost(schedule: Schedule, *, unroll_threshold: int = 0,
@@ -303,6 +325,7 @@ def plan_strategy(
     backend: Optional[str] = None,
     interpret: bool = True,
     rewritten: Optional[Dict[str, RewriteCandidate]] = None,
+    sweep: Optional[SweepCandidate] = None,
 ) -> PlanDecision:
     """Pick an execution strategy *and matrix transformation* from the
     analysis + schedule cost model.
@@ -313,9 +336,13 @@ def plan_strategy(
     :class:`RewriteCandidate` alternatives — rewriting shortens the chain
     (fewer segments on the rewritten schedule) but pays fill (that
     schedule's padded FLOPs) plus the per-solve RHS transform; coarsening
-    removes syncs but pays padding.  All combinations are priced with the
-    same launch-cost/padded-FLOP model, so *rewrite vs coarsen vs both* is
-    one ``min()`` over ``costs``.
+    removes syncs but pays padding.  ``sweep`` prices the sync-free
+    speculative executor when its convergence model certifies a sweep count
+    (see :class:`SweepCandidate`): ``k`` fused whole-matrix updates plus one
+    verification pass, ONE dispatch total — the only candidate whose
+    sync-point term does not scale with the level structure at all.  All
+    combinations are priced with the same launch-cost/padded-FLOP model, so
+    *rewrite vs coarsen vs both vs sweeps* is one ``min()`` over ``costs``.
 
     The Pallas fused kernel is only a candidate on a TPU backend with
     ``interpret=False`` — interpret mode is a correctness harness, never a
@@ -362,6 +389,12 @@ def plan_strategy(
         _levelset_costs(f"+rewrite:{tag}", cand.schedule, cand.coarsened,
                         cand.rhs_cost)
         _fused_cost(f"+rewrite:{tag}", cand.schedule, cand.rhs_cost)
+    if sweep is not None:
+        # k sweeps + 1 verification pass, each one fused ELL gather-sum over
+        # all rows (2*K*n FMA-ish flops + n divides), one dispatch total.
+        # The verification readback is the solve's single sync point.
+        costs["sweep"] = (sweep.k + 1) * (2 * sweep.ell_k * sweep.n
+                                          + sweep.n) + segment_cost
 
     best = min(costs, key=costs.get)
     parts = best.split("+")
@@ -372,6 +405,8 @@ def plan_strategy(
         strategy=strategy,
         coarsen="coarsen" in parts,
         rewrite=rewrite_tag,
+        sweep_k=sweep.k if (sweep is not None and strategy == "sweep")
+        else None,
         reason=(
             # critical_fraction is deliberately NOT formatted here: it is a
             # lazy O(num_levels) computation and the reason line is built on

@@ -38,6 +38,7 @@ __all__ = [
     "GATHER_UNROLL_MAX_K",
     "build_schedule",
     "build_ell",
+    "build_offdiag_ell",
     "slab_padded_flops",
     "stack_sub_slabs",
     "serial_arrays",
@@ -319,6 +320,34 @@ def build_ell(M: CSRMatrix) -> EllMatrix:
         vals[:k, i] = M.data[lo:hi]
         val_src[:k, i] = np.arange(lo, hi, dtype=np.int64)
     return EllMatrix(cols=cols, vals=vals, val_src=val_src)
+
+
+def build_offdiag_ell(M: CSRMatrix, *, upper: bool = False):
+    """Split a triangular matrix into its strictly-triangular ELL part ``N``
+    and diagonal ``D`` — the ``L = D + N`` decomposition the sync-free sweep
+    executor iterates on (:mod:`repro.core.sweep`).
+
+    Returns ``(ell, diag, diag_src)``: ``ell`` is the off-diagonal part as a
+    transposed ``(K, n)`` :class:`EllMatrix` with its value-source map
+    recorded, ``diag`` the ``(n,)`` diagonal, ``diag_src`` its indices into
+    ``M.data`` — so a value-only refresh re-packs both with one masked
+    gather.  ``upper=True`` reads upper-triangular storage (diagonal first
+    per row, e.g. ``L.transpose()``)."""
+    row_nnz = M.row_nnz() - 1
+    K = max(int(row_nnz.max()) if row_nnz.size else 0, 1)
+    cols = np.zeros((K, M.n), dtype=np.int32)
+    vals = np.zeros((K, M.n), dtype=M.dtype)
+    val_src = np.full((K, M.n), -1, dtype=np.int64)
+    for i in range(M.n):
+        lo, hi = int(M.indptr[i]), int(M.indptr[i + 1])
+        sl = slice(lo + 1, hi) if upper else slice(lo, hi - 1)
+        k = sl.stop - sl.start
+        cols[:k, i] = M.indices[sl]
+        vals[:k, i] = M.data[sl]
+        val_src[:k, i] = np.arange(sl.start, sl.stop, dtype=np.int64)
+    diag = M.diagonal(first=upper)
+    diag_src = (M.indptr[:-1] if upper else M.indptr[1:] - 1).astype(np.int64)
+    return EllMatrix(cols=cols, vals=vals, val_src=val_src), diag, diag_src
 
 
 # --------------------------------------------------------------------------

@@ -63,6 +63,7 @@ __all__ = [
     "PackedLayout",
     "PackedStats",
     "build_packed_layout",
+    "ell_packed_stats",
     "gather_src",
     "pack_values",
     "make_packed_levelset_solver",
@@ -252,6 +253,21 @@ def build_packed_layout(
         diag_flat=cat(diag_b, dtype),
         vals_src=cat(vsrc_b, np.int64),
         diag_src=cat(dsrc_b, np.int64),
+    )
+
+
+def ell_packed_stats(ell, diag: np.ndarray, *, n: int) -> PackedStats:
+    """:class:`PackedStats` for a whole-matrix ELL layout (the ``sweep``
+    executor's ``D + N`` split): one segment, no permutation, padding share
+    read off the value-source map."""
+    pad = int((ell.val_src < 0).sum())
+    return PackedStats(
+        permutation_applied=False,
+        value_bytes=ell.vals.nbytes + diag.nbytes,
+        index_bytes=ell.cols.nbytes,
+        padded_value_bytes=pad * ell.vals.itemsize,
+        n_pad=n,
+        num_segments=1,
     )
 
 

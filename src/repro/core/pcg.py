@@ -59,6 +59,8 @@ def make_ic_preconditioner(
     *,
     strategy: str = "levelset",
     rewrite: Optional[RewriteConfig] = RewriteConfig(thin_threshold=2),
+    sweeps: Optional[int] = None,
+    sweep_tol: Optional[float] = None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Given lower factor L (A ≈ L Lᵀ) build z = (L Lᵀ)^{-1} r.
 
@@ -67,8 +69,30 @@ def make_ic_preconditioner(
     are packed from an O(nnz) CSC view of ``L`` (``SpTRSV.build_pair``).
     The legacy construction — transpose + reverse-permute + a second full
     ``SpTRSV.build`` — is benchmarked against this one in
-    ``benchmarks/preconditioner.py``."""
-    fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite)
+    ``benchmarks/preconditioner.py``.
+
+    ``sweeps=k`` switches to the **inexact** stale-synchronous mode: each
+    triangular solve becomes ``k`` sync-free Jacobi sweeps
+    (:mod:`repro.core.sweep`, ``fallback=None`` — no verification, no
+    correction, ONE fused dispatch per apply).  A k-sweep apply is a *fixed
+    linear operator* — the same truncated Neumann polynomial of ``L``
+    every call — so standard (non-flexible) PCG remains valid with it; an
+    inexact ``M⁻¹`` only needs to stay a contraction, not an exact solve.
+    Pair it with ``pcg(..., stall_window=...)`` so iteration control notices
+    if ``k`` was chosen too small to keep helping.  ``sweep_tol`` is
+    accepted for config symmetry but only matters if verification is
+    re-enabled.  ``rewrite`` is ignored in sweep mode — the sweeps consume
+    the factor directly and an RHS transform would add a dispatch to the
+    apply for nothing."""
+    if sweeps is not None:
+        from .sweep import SweepConfig
+
+        fwd, bwd = SpTRSV.build_pair(
+            L, strategy="sweep", rewrite=None,
+            sweep=SweepConfig(k=sweeps, residual_tol=sweep_tol,
+                              fallback=None))
+    else:
+        fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite)
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
         return bwd.solve(fwd.solve(r))
@@ -81,6 +105,8 @@ def make_ic_preconditioner_batched(
     *,
     strategy: str = "levelset",
     rewrite: Optional[RewriteConfig] = RewriteConfig(thin_threshold=2),
+    sweeps: Optional[int] = None,
+    sweep_tol: Optional[float] = None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Batched z = (L Lᵀ)^{-1} R for R: (n, m).
 
@@ -89,13 +115,23 @@ def make_ic_preconditioner_batched(
     transpose) operate column-wise on (n, m) arrays.  Kept as a named entry
     point so batched PCG call sites read explicitly and stay stable if the
     single-RHS path ever specializes."""
-    return make_ic_preconditioner(L, strategy=strategy, rewrite=rewrite)
+    return make_ic_preconditioner(L, strategy=strategy, rewrite=rewrite,
+                                  sweeps=sweeps, sweep_tol=sweep_tol)
 
 
 def pcg(A: CSRMatrix, b: jnp.ndarray,
         M_inv: Optional[Callable] = None,
-        *, tol: float = 1e-8, maxiter: int = 500) -> PCGResult:
-    """Standard PCG on SPD A (host loop; each iteration jit-executed)."""
+        *, tol: float = 1e-8, maxiter: int = 500,
+        stall_window: int = 0) -> PCGResult:
+    """Standard PCG on SPD A (host loop; each iteration jit-executed).
+
+    ``stall_window`` (0 = off) enables tolerance-aware iteration control for
+    inexact preconditioners (``make_ic_preconditioner(..., sweeps=k)``): if
+    the residual norm fails to improve on its running best for that many
+    consecutive iterations, the loop stops and returns the best-so-far
+    iterate as non-converged instead of burning the rest of ``maxiter`` on a
+    stagnated recurrence — the signature that ``k`` sweeps stopped being a
+    useful contraction at the requested ``tol``."""
     from .codegen import build_ell, ell_spmv
 
     ell = build_ell(A)
@@ -119,14 +155,31 @@ def pcg(A: CSRMatrix, b: jnp.ndarray,
     z = M_inv(r) if M_inv else r
     p = z
     rz = jnp.vdot(r, z)
+    best_res = res
+    stall = 0
     for it in range(maxiter):
         Ap = matvec(p)
-        alpha = rz / jnp.vdot(p, Ap)
+        pap = jnp.vdot(p, Ap)
+        if float(pap) == 0.0:
+            # Lanczos breakdown (p in the null space of the Krylov
+            # recurrence, e.g. A = 0 or an indefinite M).  pcg_batched
+            # guards this division; the unbatched path silently produced
+            # NaN x with converged=False unset.  Return the last finite
+            # iterate as a well-formed non-converged result.
+            return PCGResult(x, it, res, False)
+        alpha = rz / pap
         x = x + alpha * p
         r = r - alpha * Ap
         res = float(jnp.linalg.norm(r))
         if res <= tol * b_norm:
             return PCGResult(x, it + 1, res, True)
+        if stall_window > 0:
+            if res < 0.999 * best_res:
+                best_res, stall = res, 0
+            else:
+                stall += 1
+                if stall >= stall_window:
+                    return PCGResult(x, it + 1, res, False)
         z = M_inv(r) if M_inv else r
         rz_new = jnp.vdot(r, z)
         p = z + (rz_new / rz) * p

@@ -32,9 +32,11 @@ levelset_unroll    yes         yes        yes        yes        yes        yes  
 pallas_level       yes         yes        yes        yes        yes        yes        no
 pallas_fused       yes         yes        yes        yes        n/a (1 seg) yes       no
 distributed        yes         yes        yes        yes        yes        yes        yes (mesh axis)
+sweep              yes         yes        yes        yes        n/a (0 seg) yes       no
 auto               transform planner: picks serial / levelset /
-                   levelset_unroll / pallas_fused AND the matrix transform
-                   (rewrite policy x coarsening) from one cost model
+                   levelset_unroll / pallas_fused / sweep AND the matrix
+                   transform (rewrite policy x coarsening) from one cost
+                   model
 =================  ==========  =========  =========  =========  =========  =========  ============
 
 Transform planner (``strategy="auto"``)
@@ -49,12 +51,19 @@ like every other alternative.  The decision is recorded on ``solver.plan``
 (:class:`repro.core.coarsen.PlanDecision`):
 
 ``plan.strategy``   executor chosen (``serial``/``levelset``/
-                    ``levelset_unroll``/``pallas_fused``)
+                    ``levelset_unroll``/``pallas_fused``/``sweep``)
 ``plan.coarsen``    whether schedule coarsening is applied
 ``plan.rewrite``    winning rewrite-policy tag (``"thin"`` /
                     ``"critical_path"``) or ``None`` for no rewrite
+``plan.sweep_k``    certified sweep count when the sync-free speculative
+                    executor won (``plan.strategy == "sweep"``), else None.
+                    Sweeps are priced against level-set execution from the
+                    depth/contraction profile: ``k`` fused whole-matrix
+                    updates + 1 verification pass vs. per-segment launch
+                    cost — the sweeps-vs-levels decision.
 ``plan.costs``      modelled per-solve cost of every candidate, keyed
-                    ``<strategy>[+rewrite:<tag>][+coarsen]``
+                    ``<strategy>[+rewrite:<tag>][+coarsen]`` (plus
+                    ``sweep``)
 ``plan.reason``     human-readable audit line (also in ``stats()["plan"]``)
 
 An explicit ``rewrite=RewriteConfig(...)`` is a user directive: the rewrite
@@ -89,14 +98,24 @@ Strategies
                    per *segment* — rewriting and coarsening both reduce
                    collective count; a batch multiplies collective payload,
                    not count)
+``sweep``          sync-free speculative solve-then-correct
+                   (:mod:`repro.core.sweep`): k Jacobi-style triangular
+                   sweeps ``x ← D⁻¹(b − N x)`` as ONE fused dispatch with
+                   zero intra-solve barriers, componentwise residual
+                   verification, exact-strategy fallback for non-converged
+                   columns (``sweep=SweepConfig(k, residual_tol,
+                   fallback)``).  The only executor whose per-solve cost is
+                   independent of the level count.
 ``auto``           transform planner (:func:`repro.core.coarsen.plan_strategy`):
                    serial for chain-like DAGs, (coarsened) level-set
                    executors for wavefront-parallel matrices, the fused
-                   Pallas kernel for VMEM-sized systems on a real TPU —
-                   and, for barrier-dominated schedules, whether to rewrite
-                   the matrix first (``thin`` vs ``critical_path`` policy)
-                   under the same cost model.  The decision is recorded on
-                   ``solver.plan`` (see "Transform planner" above).
+                   Pallas kernel for VMEM-sized systems on a real TPU,
+                   sync-free sweeps when the convergence model certifies a
+                   cheap-enough sweep count — and, for barrier-dominated
+                   schedules, whether to rewrite the matrix first (``thin``
+                   vs ``critical_path`` policy) under the same cost model.
+                   The decision is recorded on ``solver.plan`` (see
+                   "Transform planner" above).
 
 Schedule coarsening (``coarsen=...``)
 -------------------------------------
@@ -140,6 +159,7 @@ from .coarsen import (
     CoarsenConfig,
     PlanDecision,
     RewriteCandidate,
+    SweepCandidate,
     coarsen_schedule,
     plan_strategy,
     should_consider_rewrite,
@@ -157,6 +177,7 @@ from .levels import LevelSets, build_level_sets, build_reverse_level_sets
 from .packed import (
     PackedStats,
     build_packed_layout,
+    ell_packed_stats,
     make_packed_levelset_solver,
     make_packed_rhs_transform,
     make_packed_serial_solver,
@@ -168,6 +189,16 @@ from .rewrite import (
     RewriteResult,
     replay_rewrite_values,
     rewrite_matrix,
+)
+from .sweep import (
+    SweepConfig,
+    SweepStats,
+    build_sweep_layout,
+    contraction_factor,
+    default_residual_tol,
+    make_sweep_solver,
+    pack_sweep_values,
+    planned_sweeps,
 )
 
 __all__ = ["SpTRSV", "STRATEGIES", "LAYOUTS"]
@@ -181,6 +212,7 @@ STRATEGIES = (
     "pallas_level",
     "pallas_fused",
     "distributed",
+    "sweep",
     "auto",
 )
 
@@ -203,6 +235,19 @@ def _as_coarsen_config(coarsen) -> Optional[CoarsenConfig]:
         return CoarsenConfig()
     assert isinstance(coarsen, CoarsenConfig), coarsen
     return coarsen
+
+
+def _as_sweep_config(sweep) -> Optional[SweepConfig]:
+    """Normalize the ``sweep`` build knob: None/False → default off
+    (``strategy="sweep"`` still gets a default config; ``False`` additionally
+    keeps sweeps out of the auto planner's candidate set), True → default
+    config, a SweepConfig → itself."""
+    if sweep is None or sweep is False:
+        return None
+    if sweep is True:
+        return SweepConfig()
+    assert isinstance(sweep, SweepConfig), sweep
+    return sweep
 
 
 @dataclasses.dataclass
@@ -251,9 +296,11 @@ class SpTRSV:
     plan: Optional[PlanDecision] = None   # set when strategy="auto" planned
     layout: str = "scatter"
     packed_stats: Optional[PackedStats] = None
+    sweep_stats: Optional[SweepStats] = None   # live, strategy="sweep" only
     _values: Optional[tuple] = None       # runtime value buffers (permuted)
     _e_values: Optional[jnp.ndarray] = None
     _refresh_ctx: Optional[_RefreshCtx] = None
+    _sweep_exec: Optional[Callable] = None  # jitted barrier-free executor
 
     @staticmethod
     def build(
@@ -265,6 +312,7 @@ class SpTRSV:
         unroll_threshold: int = 4,
         bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
         coarsen=None,                    # True / CoarsenConfig: merge levels
+        sweep=None,                      # True / SweepConfig: see below
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -275,6 +323,14 @@ class SpTRSV:
     ) -> "SpTRSV":
         """Build a solver for ``L x = b`` (or ``Lᵀ x = b`` with
         ``transpose=True``).  ``L`` is always the lower-triangular factor.
+
+        ``sweep`` configures the sync-free speculative executor
+        (:class:`repro.core.sweep.SweepConfig` — sweep count ``k``,
+        componentwise ``residual_tol``, exact ``fallback`` strategy).  With
+        ``strategy="sweep"`` the config (default if omitted) drives the
+        executor directly; with ``strategy="auto"`` it caps the sweep count
+        the planner may certify (``sweep=False`` keeps sweeps out of the
+        candidate set entirely).
 
         ``coarsen`` merges adjacent levels into super-level slabs under the
         :mod:`repro.core.coarsen` cost model (fewer segments / sync points;
@@ -304,7 +360,7 @@ class SpTRSV:
             strategy=strategy, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio,
-            coarsen=coarsen,
+            coarsen=coarsen, sweep=sweep,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             interpret=interpret, jit=jit,
             layout=layout, gather_unroll_max_k=gather_unroll_max_k,
@@ -348,6 +404,7 @@ class SpTRSV:
         unroll_threshold: int = 4,
         bucket_pad_ratio: float = 0.0,
         coarsen=None,
+        sweep=None,
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -369,7 +426,7 @@ class SpTRSV:
         build_kwargs = dict(
             upper=upper, strategy=strategy_arg, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
-            bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen,
+            bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen, sweep=sweep,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             interpret=interpret, jit=jit, layout=layout,
             gather_unroll_max_k=gather_unroll_max_k,
@@ -378,6 +435,9 @@ class SpTRSV:
             source, values_map = system, None
         analysis = analyze(system, levels, upper=upper)
         ccfg = _as_coarsen_config(coarsen)
+        scfg = _as_sweep_config(sweep)
+        if strategy == "sweep" and scfg is None:
+            scfg = SweepConfig()
 
         rres: Optional[RewriteResult] = None
         rhs_fn = None
@@ -441,12 +501,35 @@ class SpTRSV:
                         schedule=sched_r, coarsened=co_r,
                         rhs_cost=2.0 * k_e * system.n + SEGMENT_COST)
                     cand_artifacts[policy] = (cfg_r, rr, sched_r, co_r)
+            # Price the sync-free sweep executor when its convergence model
+            # certifies a sweep count within the configured budget: exact
+            # after depth sweeps (D⁻¹N nilpotent), earlier when the iteration
+            # contracts (q = ‖D⁻¹N‖_∞ < 1).  ``sweep=False`` opts out.
+            sweep_cand = None
+            if sweep is not False:
+                scfg0 = scfg if scfg is not None else SweepConfig()
+                q = contraction_factor(target, upper=upper)
+                tol = (scfg0.residual_tol if scfg0.residual_tol is not None
+                       else default_residual_tol(target.dtype))
+                k_plan = planned_sweeps(q, target_levels.num_levels, tol,
+                                        scfg0.k)
+                if k_plan is not None:
+                    row_off = target.row_nnz() - 1
+                    sweep_cand = SweepCandidate(
+                        k=k_plan,
+                        ell_k=max(int(row_off.max()) if row_off.size else 0,
+                                  1),
+                        n=target.n, contraction=q)
             plan = plan_strategy(
                 analysis, _schedule(),
                 _coarsened(plan_ccfg) if plan_ccfg is not None else None,
                 unroll_threshold=unroll_threshold, interpret=interpret,
-                rewritten=cands or None)
+                rewritten=cands or None, sweep=sweep_cand)
             strategy = plan.strategy
+            if strategy == "sweep":
+                scfg = dataclasses.replace(
+                    scfg if scfg is not None else SweepConfig(),
+                    k=plan.sweep_k)
             if plan.rewrite is not None:
                 # adopt the winning rewrite: its result and schedules were
                 # already built for pricing — no recompute
@@ -481,6 +564,8 @@ class SpTRSV:
         repack: Optional[Callable] = None
         packed_stats: Optional[PackedStats] = None
         schedule: Optional[Schedule] = None
+        sweep_stats: Optional[SweepStats] = None
+        sweep_exec: Optional[Callable] = None
         if strategy == "serial":
             if permuted:
                 # no level segments to permute, but the scan operands become
@@ -566,14 +651,59 @@ class SpTRSV:
                 dsched = shard_schedule(schedule, ndev)
                 fn = make_distributed_solver(
                     dsched, mesh, mesh_axis, strategy=dist_strategy)
+        elif strategy == "sweep":
+            # sync-free speculative solve-then-correct (repro.core.sweep):
+            # whole-matrix D + N split, k fused sweeps, no schedule at all.
+            # The exact-fallback solver is built lazily on first use — the
+            # converged common case never pays its build.
+            slayout = build_sweep_layout(target, upper=upper)
+            cur_target = [target]
+            fb_holder: dict = {}
+
+            def _fallback():
+                if "s" not in fb_holder:
+                    fb_holder["s"] = SpTRSV._build_system(
+                        cur_target[0], target_levels, upper=upper,
+                        strategy=scfg.fallback, rewrite=None,
+                        unroll_threshold=unroll_threshold,
+                        bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen,
+                        interpret=interpret, jit=jit, layout=layout,
+                        gather_unroll_max_k=gather_unroll_max_k)
+                return fb_holder["s"].solve
+
+            fn, sweep_stats, sweep_exec = make_sweep_solver(
+                slayout, scfg,
+                fallback=_fallback if scfg.fallback is not None else None,
+                jit=jit, runtime_values=permuted)
+            if permuted:
+                values = (jnp.asarray(slayout.ell.vals),
+                          jnp.asarray(slayout.diag))
+
+                def repack(target_data, _sl=slayout, _t=target):
+                    # keep the lazily-built exact fallback numerically in
+                    # sync with the refreshed values
+                    cur_target[0] = CSRMatrix(
+                        _t.indptr, _t.indices,
+                        np.asarray(target_data).astype(_t.dtype, copy=False),
+                        _t.shape)
+                    if "s" in fb_holder:
+                        fb_holder["s"].refresh(cur_target[0].data)
+                    return pack_sweep_values(_sl, target_data)
+
+                packed_stats = ell_packed_stats(
+                    slayout.ell, slayout.diag, n=system.n)
         else:  # pragma: no cover
             raise ValueError(strategy)
 
         # jit the RHS transform b' = E b separately from the solve.  A
         # single jit over both lets XLA fuse the batched SpMV into the
         # per-level consumers and recompute it, a >10x slowdown at m=64 on
-        # CPU; the extra dispatch costs microseconds.
-        solve_fn = jax.jit(fn) if jit else fn
+        # CPU; the extra dispatch costs microseconds.  The sweep wrapper is
+        # a host function (verification readback + fallback dispatch) whose
+        # pure executor is already jitted inside make_sweep_solver — an
+        # outer jit would trace the data-dependent fallback branch away.
+        solve_fn = fn if strategy == "sweep" else \
+            (jax.jit(fn) if jit else fn)
         rhs_c = (jax.jit(rhs_fn) if jit else rhs_fn) if rhs_fn is not None \
             else None
 
@@ -605,10 +735,21 @@ class SpTRSV:
             plan=plan,
             layout=layout,
             packed_stats=packed_stats,
+            sweep_stats=sweep_stats,
             _values=values,
             _e_values=e_values,
             _refresh_ctx=ctx,
+            _sweep_exec=sweep_exec,
         )
+
+    @property
+    def dtype(self) -> np.dtype:
+        """Numeric dtype of the solved system's stored values — what batch
+        buffers should be allocated in to hit the compiled executable's
+        jit-cache bucket (see ``SolveEngine._solve_group``)."""
+        if self._refresh_ctx is not None:
+            return self._refresh_ctx.system.dtype
+        return np.dtype(np.float64)
 
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:
         """Solve L x = b (or Lᵀ x = b for a ``transpose`` solver).  ``b``
@@ -747,4 +888,7 @@ class SpTRSV:
             "planned_transform": (
                 {"rewrite": self.plan.rewrite, "coarsen": self.plan.coarsen}
                 if self.plan else None),
+            "sweep": (self.sweep_stats.report()
+                      if self.sweep_stats is not None else None),
+            "planned_sweeps": self.plan.sweep_k if self.plan else None,
         }

@@ -213,10 +213,15 @@ class SolveEngine:
     def refresh(self, new_values) -> "SolveEngine":
         """Value-only numeric refresh of the engine's factor: new ``data``
         for the same sparsity pattern (array aligned with the original L's
-        CSR storage, or a pattern-identical ``CSRMatrix``).  Refreshes the
-        forward and (if present) transpose solver in place — queued requests
-        are unaffected and subsequent solves use the new values with the
-        already-compiled executables."""
+        CSR storage, or a pattern-identical ``CSRMatrix``).
+
+        The queue is **drained first**: every request already submitted is
+        solved against the factor it was submitted against, then the values
+        swap in for subsequent solves (reusing the already-compiled
+        executables via ``SpTRSV.refresh``).  Without the drain, in-flight
+        requests would silently be answered with a factor that did not exist
+        when they were enqueued."""
+        self.run()
         self.solver.refresh(new_values)
         if self.solver_t is not None:
             self.solver_t.refresh(new_values)
@@ -241,8 +246,11 @@ class SolveEngine:
 
     def _solve_group(self, solver, reqs) -> None:
         m = self._bucket(len(reqs))
-        dtype = np.result_type(*(r.b.dtype for r in reqs))
-        B = np.zeros((solver.n, m), dtype=dtype)
+        # the batch buffer is allocated in the SOLVER's dtype, not
+        # result_type over the requests: one float64 request would up-cast
+        # the whole bucket and miss every jit-cache entry compiled at the
+        # solver's dtype (a fresh trace + compile per mixed batch)
+        B = np.zeros((solver.n, m), dtype=solver.dtype)
         for j, r in enumerate(reqs):
             B[:, j] = r.b
         X = np.asarray(solver.solve_batched(jnp.asarray(B)))

@@ -37,7 +37,7 @@ from repro.core import RewriteConfig, SpTRSV
 from repro.sparse import PATHOLOGICAL_PATTERNS, pathological
 
 STRATEGIES = ["serial", "levelset", "levelset_unroll",
-              "pallas_level", "pallas_fused"]
+              "pallas_level", "pallas_fused", "sweep"]
 POLICIES = {
     "none": None,
     "thin": RewriteConfig(thin_threshold=2),
@@ -133,6 +133,32 @@ def test_differential_slice(pattern):
     with enable_x64():
         for combo in _combos_for(pattern, exhaustive=False):
             _run_combo(L, pattern, 1, combo)
+
+
+# --------------------------------------------------------------------------
+# sweep executor: pathological convergence — the fallback must actually fire
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", ["near_singular", "dense_last_row"])
+def test_sweep_fallback_fires_on_pathological(pattern):
+    """Patterns the Jacobi sweep iteration cannot certify (a ~9-decade
+    diagonal spread / a dense final row accumulating the whole vector):
+    k=1 speculation must fail verification, the exact fallback must fire,
+    and the corrected answer must still satisfy the same oracle criteria as
+    every other strategy."""
+    from repro.core import SpTRSV as _S
+    from repro.core.sweep import SweepConfig
+
+    L = pathological(pattern, n=72, seed=1)
+    with enable_x64():
+        rng = np.random.default_rng(10_001)
+        b = rng.standard_normal(L.n)
+        s = _S.build(L, strategy="sweep", sweep=SweepConfig(k=1))
+        x = s.solve(jnp.asarray(b))
+        assert s.sweep_stats.fallback_solves == 1, \
+            "speculation unexpectedly passed verification at k=1"
+        assert s.sweep_stats.fallback_columns == 1
+        combo = ("sweep", "none", "permuted", False, 0)
+        _check(L, pattern, x, b, _oracle(L, b, False), False, combo, 1)
 
 
 @pytest.mark.fuzz

@@ -65,6 +65,36 @@ def test_pcg_zero_rhs_converges_immediately():
     assert res_m.converged and np.isfinite(np.asarray(res_m.x)).all()
 
 
+def test_pcg_breakdown_returns_wellformed():
+    """Lanczos breakdown (pᵀAp = 0, e.g. A = 0): the unbatched path used to
+    divide by zero and return NaN x with converged=False unset downstream;
+    it must return the last finite iterate as a well-formed non-converged
+    result — the same guard pcg_batched always had."""
+    from repro.core import from_coo
+
+    n = 8
+    Z = from_coo([0], [0], [0.0], (n, n))   # all-zero SPD-shaped matrix
+    res = pcg(Z, jnp.ones(n, jnp.float32), None, maxiter=10)
+    assert not res.converged
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert np.isfinite(res.residual)
+
+
+def test_pcg_stall_window_stops_stagnation():
+    """A rank-deficient preconditioner confines the search directions to a
+    subspace: the residual component outside it can never shrink, so the
+    iteration stagnates at a nonzero floor.  stall_window must cut the loop
+    short as non-converged instead of burning all of maxiter (the
+    iteration-control companion of the inexact sweeps preconditioner)."""
+    A = poisson2d(8, 8, dtype=np.float32)
+    b = jnp.asarray(np.random.default_rng(2).normal(size=A.n).astype(np.float32))
+    mask = jnp.asarray((np.arange(A.n) % 2 == 0).astype(np.float32))
+    frozen = pcg(A, b, lambda r: r * mask, tol=1e-6, maxiter=400,
+                 stall_window=5)
+    assert not frozen.converged
+    assert frozen.iters < 400
+
+
 def test_pcg_batched_maxiter_zero_and_zero_rhs():
     from repro.core.pcg import pcg_batched
 

@@ -1,0 +1,83 @@
+"""SolveEngine serving-tier regressions.
+
+Two bugfixes pinned here:
+
+* ``refresh`` must drain the admission queue before swapping factor values —
+  an in-flight request is answered with the factor that existed when it was
+  enqueued, never silently re-priced against values from the future;
+* ``_solve_group`` allocates the batch buffer in the **solver's** dtype, not
+  ``np.result_type`` over the requests — one float64 request must not up-cast
+  the bucket and miss every jit-cache entry compiled at the solver's dtype.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSRMatrix, SpTRSV
+from repro.serve import SolveEngine
+from repro.sparse import chain_matrix
+
+
+def _regen_values(L, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=L.nnz).astype(L.dtype)
+    diag_mask = np.zeros(L.nnz, bool)
+    for i in range(L.n):  # keep the factor well-conditioned
+        diag_mask[L.indptr[i + 1] - 1] = True
+    data[diag_mask] = np.abs(data[diag_mask]) + 1.0
+    return data
+
+
+def test_refresh_drains_queue_before_value_swap():
+    L = chain_matrix(80, dtype=np.float64)
+    eng = SolveEngine.from_matrix(L, strategy="levelset", transpose_too=False,
+                                  max_batch=8)
+    rng = np.random.default_rng(3)
+    b = rng.normal(size=L.n)
+    # submit against the ORIGINAL factor, then refresh without running
+    inflight = eng.submit(b)
+    data2 = _regen_values(L, seed=9)
+    eng.refresh(data2)
+    # the drain inside refresh must have answered the in-flight request
+    # against the old values
+    assert inflight.done
+    old = SpTRSV.build(L, strategy="levelset")
+    np.testing.assert_allclose(
+        inflight.x, np.asarray(old.solve(jnp.asarray(b))),
+        rtol=1e-12, atol=1e-12)
+    # a post-refresh submit is answered with the NEW values
+    after = eng.submit(b)
+    eng.run()
+    new = SpTRSV.build(CSRMatrix(L.indptr, L.indices, data2, L.shape),
+                       strategy="levelset")
+    np.testing.assert_allclose(
+        after.x, np.asarray(new.solve(jnp.asarray(b))),
+        rtol=1e-12, atol=1e-12)
+    # and the two factors genuinely differ, or the test proves nothing
+    assert not np.allclose(inflight.x, after.x)
+
+
+def test_mixed_dtype_request_does_not_retrace():
+    L = chain_matrix(64, dtype=np.float32)
+    s = SpTRSV.build(L, strategy="levelset")
+    eng = SolveEngine(s, max_batch=4)
+    rng = np.random.default_rng(5)
+    # warm the m=4 bucket at the solver's dtype
+    f32_reqs = [eng.submit(rng.normal(size=L.n).astype(np.float32))
+                for _ in range(4)]
+    assert eng.run() == 4
+    if not hasattr(s._solve_fn, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this JAX")
+    before = s._solve_fn._cache_size()
+    # a float64 request in an otherwise-f32 bucket must be solved at the
+    # solver's dtype, hitting the already-compiled bucket
+    mixed = [eng.submit(rng.normal(size=L.n).astype(np.float64))
+             for _ in range(4)]
+    assert eng.run() == 4
+    assert s._solve_fn._cache_size() == before
+    for r in f32_reqs + mixed:
+        assert r.done
+        assert r.x.dtype == np.float32
+        np.testing.assert_allclose(
+            r.x, np.asarray(s.solve(jnp.asarray(r.b, jnp.float32))),
+            rtol=1e-6, atol=1e-6)
