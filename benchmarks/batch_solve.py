@@ -29,12 +29,13 @@ from repro.core import RewriteConfig, SpTRSV
 from repro.sparse import lung2_like
 
 try:  # runnable both as `python -m benchmarks.batch_solve` and as a file
-    from .common import emit, flush_csv, timeit
+    from .common import emit, flush_csv, timeit, write_bench_json
 except ImportError:  # pragma: no cover
-    from common import emit, flush_csv, timeit
+    from common import emit, flush_csv, timeit, write_bench_json
 
 
-def run(*, dry_run: bool = False, pallas: bool = False):
+def run(*, dry_run: bool = False, pallas: bool = False,
+        json_path: str = ""):
     print("== batch_solve: per-solve wall time vs batch width ==")
     if dry_run:
         L = lung2_like(scale=0.02, fat_levels=4, thin_run=6, dtype=np.float32)
@@ -83,6 +84,10 @@ def run(*, dry_run: bool = False, pallas: bool = False):
             emit(f"batch.{strategy}.{tag}.trend", trend,
                  m1_ms=f"{series[0]*1e3:.3f}",
                  mmax_ms=f"{series[-1]*1e3:.3f}")
+    if json_path:
+        flat = {f"{strategy}.{tag}.m{m}": {"per_solve_s": t}
+                for (strategy, tag, m), t in results.items()}
+        write_bench_json(json_path, "batch", flat, n=L.n, nnz=L.nnz)
     return results
 
 
@@ -92,9 +97,10 @@ def main(argv=None):
                     help="tiny matrix, 2 widths, 2 iters (CI smoke)")
     ap.add_argument("--pallas", action="store_true",
                     help="include Pallas kernels (interpret mode; slow)")
+    ap.add_argument("--json", default="", help="write shared-schema JSON here")
     ap.add_argument("--csv", default=None, help="write results CSV here")
     args = ap.parse_args(argv)
-    run(dry_run=args.dry_run, pallas=args.pallas)
+    run(dry_run=args.dry_run, pallas=args.pallas, json_path=args.json)
     if args.csv:
         flush_csv(args.csv)
 

@@ -23,6 +23,7 @@ Usage::
 
     python -m benchmarks.coarsen             # full lung2-scale run
     python -m benchmarks.coarsen --smoke     # CI smoke w/ assertions
+    python -m benchmarks.coarsen --smoke --json BENCH_coarsen.json
 """
 from __future__ import annotations
 
@@ -37,12 +38,12 @@ from repro.core.coarsen import CoarsenConfig, coarsen_stats
 from repro.sparse import lung2_like
 
 try:  # runnable both as `python -m benchmarks.coarsen` and as a file
-    from .common import emit, flush_csv, timeit
+    from .common import emit, flush_csv, timeit, write_bench_json
 except ImportError:  # pragma: no cover
-    from common import emit, flush_csv, timeit
+    from common import emit, flush_csv, timeit, write_bench_json
 
 
-def run(*, smoke: bool = False):
+def run(*, smoke: bool = False, json_path: str = ""):
     print("== coarsen: synchronization-aware level merging ==")
     if smoke:
         L = lung2_like(scale=0.05, fat_levels=8, thin_run=12, dtype=np.float32)
@@ -106,6 +107,13 @@ def run(*, smoke: bool = False):
             f"baseline {results['base']['solve_s']:.3e}s")
         print("  smoke assertions passed "
               f"({ratio:.1f}x fewer segments, err {results['coarsen']['err']:.1e})")
+
+    if json_path:
+        results["segment_reduction"] = ratio
+        results["solve_speedup"] = speedup
+        results["auto"] = dict(strategy=s_auto.strategy,
+                               coarsen=s_auto.plan.coarsen, err=err_auto)
+        write_bench_json(json_path, "coarsen", results, n=L.n, nnz=L.nnz)
     return results
 
 
@@ -113,8 +121,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small matrix + acceptance assertions (CI)")
+    ap.add_argument("--json", default="", help="write shared-schema JSON here")
     ap.add_argument("--csv", default="")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, json_path=args.json)
     if args.csv:
         flush_csv(args.csv)

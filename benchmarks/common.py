@@ -1,12 +1,24 @@
-"""Shared benchmark helpers: wall-time measurement + CSV emission."""
+"""Shared benchmark helpers: wall-time measurement + CSV/JSON emission.
+
+The JSON side defines the repo's **shared perf-trajectory schema**: every
+``BENCH_*.json`` artifact is ``{"schema": [...], "records": [...]}`` where
+each record carries ``name`` (dotted metric group), ``backend`` (resolved
+kernel backend the run executed on), ``n`` / ``nnz`` (problem size),
+``metric`` (leaf key) and ``value`` — so CI can diff trajectories across
+benchmarks without per-script parsers.
+"""
 from __future__ import annotations
 
+import json
+import numbers
 import time
 
 import jax
 import numpy as np
 
 ROWS = []
+
+BENCH_SCHEMA = ("name", "backend", "n", "nnz", "metric", "value")
 
 
 def timeit(fn, *args, iters: int = 10, warmup: int = 3) -> float:
@@ -35,3 +47,54 @@ def flush_csv(path: str):
         w = csv.DictWriter(f, fieldnames=keys)
         w.writeheader()
         w.writerows(ROWS)
+
+
+def _scalar(v):
+    """JSON-able scalar or None (numpy scalars coerced; arrays rejected)."""
+    if isinstance(v, (bool, str)) or v is None:
+        return v
+    if isinstance(v, numbers.Integral):
+        return int(v)
+    if isinstance(v, numbers.Real):
+        return float(v)
+    return None
+
+
+def to_records(prefix: str, results, *, backend=None, n=None, nnz=None):
+    """Flatten a nested result dict into shared-schema records: the dotted
+    path is split as name (all but the leaf) + metric (the leaf); non-scalar
+    leaves (schedules, arrays) are skipped."""
+    if backend is None:
+        from repro.kernels.backend import default_backend_name
+
+        backend = default_backend_name()
+    recs = []
+
+    def walk(name, v):
+        if isinstance(v, dict):
+            for k, w in v.items():
+                walk(f"{name}.{k}" if name else str(k), w)
+            return
+        sv = _scalar(v)
+        if sv is None and v is not None:
+            return
+        head, _, metric = name.rpartition(".")
+        recs.append({"name": f"{prefix}.{head}" if head else prefix,
+                     "backend": backend, "n": n, "nnz": nnz,
+                     "metric": metric or name, "value": sv})
+
+    walk("", results)
+    return recs
+
+
+def write_bench_json(path: str, prefix: str, results, *,
+                     backend=None, n=None, nnz=None):
+    """Write a shared-schema ``BENCH_*.json`` perf-trajectory artifact."""
+    payload = {
+        "schema": list(BENCH_SCHEMA),
+        "records": to_records(prefix, results, backend=backend, n=n, nnz=nnz),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"  wrote {path} ({len(payload['records'])} records)")

@@ -32,7 +32,6 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax.numpy as jnp
@@ -43,9 +42,9 @@ from repro.core.csr import CSRMatrix
 from repro.sparse import lung2_like
 
 try:  # runnable both as `python -m benchmarks.refresh` and as a file
-    from .common import emit, flush_csv, timeit
+    from .common import emit, flush_csv, timeit, write_bench_json
 except ImportError:  # pragma: no cover
-    from common import emit, flush_csv, timeit
+    from common import emit, flush_csv, timeit, write_bench_json
 
 
 def _new_values(L: CSRMatrix, seed: int) -> np.ndarray:
@@ -151,9 +150,7 @@ def run(*, smoke: bool = False, json_path: str = ""):
               "permuted <= scatter per-solve)")
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"  wrote {json_path}")
+        write_bench_json(json_path, "refresh", results, n=L.n, nnz=L.nnz)
     return results
 
 

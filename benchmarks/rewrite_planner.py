@@ -28,7 +28,6 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -41,9 +40,9 @@ from repro.core.rewrite import _participants, _rewrite_loop, _rewrite_vectorized
 from repro.sparse import banded_lower, chain_matrix, lung2_like, random_lower
 
 try:  # runnable both as `python -m benchmarks.rewrite_planner` and as a file
-    from .common import emit, flush_csv
+    from .common import emit, flush_csv, write_bench_json
 except ImportError:  # pragma: no cover
-    from common import emit, flush_csv
+    from common import emit, flush_csv, write_bench_json
 
 
 def _best_of(f, reps, *args, **kwargs):
@@ -171,9 +170,10 @@ def run(*, smoke: bool = False, json_path: str = ""):
         # clearly — guards a regression hiding in the shared phases
         assert e2e_ratio >= 2.0, (t_loop_e2e, t_vec_e2e)
         # the planner must transform the lung2-class matrix and leave the
-        # chain to the serial scan without pricing rewrites for it
+        # chain to a sequential executor (the serial scan, or the sync-free
+        # sweep once its candidate is priced) without rewriting it
         assert results["planner"]["lung2"]["rewrite"] is not None
-        assert results["planner"]["chain"]["strategy"] == "serial"
+        assert results["planner"]["chain"]["strategy"] in ("serial", "sweep")
         assert results["planner"]["chain"]["rewrite"] is None
         for name, row in results["planner"].items():
             assert row["err"] < 1e-4, (name, row["err"])
@@ -182,9 +182,8 @@ def run(*, smoke: bool = False, json_path: str = ""):
               f"{eng_ratio:.1f}x, planner transforms recorded)")
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"  wrote {json_path}")
+        write_bench_json(json_path, "rewrite_planner", results,
+                         n=L.n, nnz=L.nnz)
     return results
 
 

@@ -31,7 +31,6 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax.numpy as jnp
@@ -42,9 +41,9 @@ from repro.core.sweep import default_residual_tol
 from repro.sparse import lung2_like
 
 try:  # runnable both as `python -m benchmarks.sweep` and as a file
-    from .common import emit, flush_csv, timeit
+    from .common import emit, flush_csv, timeit, write_bench_json
 except ImportError:  # pragma: no cover
-    from common import emit, flush_csv, timeit
+    from common import emit, flush_csv, timeit, write_bench_json
 
 
 def run(*, smoke: bool = False, json_path: str = ""):
@@ -133,9 +132,8 @@ def run(*, smoke: bool = False, json_path: str = ""):
               f"{st.last_residual_ratio:.1e} <= {tol:.1e}, 0 fallbacks)")
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"  wrote {json_path}")
+        write_bench_json(json_path, "sweep", results,
+                         n=results["rows"], nnz=results["nnz"])
     return results
 
 

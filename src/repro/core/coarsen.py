@@ -31,6 +31,18 @@ pallas_fused for ``SpTRSV.build(..., strategy="auto")`` from the
 :class:`~repro.core.analysis.MatrixAnalysis` and schedule cost — chains go to
 the ``lax.scan`` serial solver, level-parallel matrices to the (coarsened)
 level-set executors, VMEM-sized matrices on a real TPU to the fused kernel.
+
+Pricing is **backend-aware**: the model's coefficients (launch cost, gather
+throughput, lane width, serial-scan cost, whether/how a fused single-dispatch
+solve exists) come from the per-device calibration table in
+:mod:`repro.core.calibrate`, keyed by the resolved
+:class:`repro.kernels.backend.KernelBackend` — there are no hard-coded
+platform checks in the planner.  The keys that differ across families:
+``launch_cost`` (a GPU kernel launch is the barrier and is pricier than a
+TPU grid step), ``gather_cost`` (relative padded-FLOP price),
+``fused_max_rows`` (0 on cpu — pallas has no compiled CPU lowering;
+VMEM-bounded on TPU; GMEM-bounded on GPU) and ``fused_num_launches``
+(``"one"`` TPU sequential grid vs ``"per_level"`` GPU span walk).
 """
 from __future__ import annotations
 
@@ -40,6 +52,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from .analysis import MatrixAnalysis
+from .calibrate import BackendCalibration, get_calibration
 from .codegen import LevelSlab, Schedule, slab_padded_flops
 
 __all__ = [
@@ -289,18 +302,58 @@ class SweepCandidate:
 
 def schedule_cost(schedule: Schedule, *, unroll_threshold: int = 0,
                   segment_cost: float = SEGMENT_COST,
-                  step_cost: float = SUBSTEP_COST) -> float:
+                  step_cost: float = SUBSTEP_COST,
+                  flop_cost: float = 1.0) -> float:
     """Modelled per-solve cost of a level-set schedule: executed (padded)
-    FLOPs, per-segment launch/sync overhead, and per-chain-sub-step loop
-    overhead for coarsened slabs."""
-    return (schedule.padded_flops(unroll_threshold)
+    FLOPs (scaled by the backend's relative ``flop_cost``), per-segment
+    launch/sync overhead, and per-chain-sub-step loop overhead for coarsened
+    slabs."""
+    return (flop_cost * schedule.padded_flops(unroll_threshold)
             + segment_cost * schedule.num_segments
             + step_cost * (schedule.total_depth - schedule.num_segments))
 
 
-# f32 VMEM budget for the fused kernel's resident x (~16 MiB, leave half for
-# slab blocks) — the fused kernel is only planned on a real TPU backend.
-_FUSED_VMEM_ROWS = 2_000_000
+# Spellings plan_strategy accepts for ``backend=`` beyond the calibration
+# families themselves: jax platform aliases and the interpret backends
+# (which execute on the host and are priced as cpu).
+_CALIBRATION_KEY = {
+    "cuda": "gpu",
+    "rocm": "gpu",
+    "interpret": "cpu",
+    "interpret:tpu": "cpu",
+    "interpret:gpu": "cpu",
+}
+
+
+def _plan_target(backend, interpret):
+    """Resolve plan_strategy's ``backend=``/``interpret=`` knobs to
+    ``(label, calibration_key, interpret_flag)``.
+
+    ``backend`` may be a resolved :class:`~repro.kernels.backend.KernelBackend`
+    (the solver path), a spec string (``cpu``/``tpu``/``gpu``/``cuda``/
+    ``rocm``/``interpret``/``interpret:gpu``), or None — which reads
+    ``jax.default_backend()``.  A ``cpu`` target is always *priced* as cpu
+    even with ``interpret=False``: there is no compiled pallas path on a CPU
+    host to price differently."""
+    from repro.kernels.backend import KernelBackend
+
+    if isinstance(backend, KernelBackend):
+        return backend.name, backend.calibration_key, backend.interpret
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    label = str(backend).lower()
+    key = _CALIBRATION_KEY.get(label, label)
+    if key not in ("cpu", "tpu", "gpu"):
+        raise ValueError(
+            f"unknown planner backend {backend!r}; expected a KernelBackend "
+            f"or one of {sorted(('cpu', 'tpu', 'gpu', *_CALIBRATION_KEY))}")
+    if interpret is None:
+        # named hardware → its compiled lowerings; cpu → the interpreter
+        # (the only way pallas executes there)
+        interpret = key == "cpu"
+    return label, key, interpret
 
 
 def should_consider_rewrite(analysis: MatrixAnalysis) -> bool:
@@ -321,9 +374,10 @@ def plan_strategy(
     coarsened: Optional[Schedule] = None,
     *,
     unroll_threshold: int = 4,
-    segment_cost: float = SEGMENT_COST,
-    backend: Optional[str] = None,
-    interpret: bool = True,
+    segment_cost: Optional[float] = None,
+    backend=None,
+    interpret: Optional[bool] = None,
+    calibration: Optional[BackendCalibration] = None,
     rewritten: Optional[Dict[str, RewriteCandidate]] = None,
     sweep: Optional[SweepCandidate] = None,
 ) -> PlanDecision:
@@ -344,14 +398,20 @@ def plan_strategy(
     combinations are priced with the same launch-cost/padded-FLOP model, so
     *rewrite vs coarsen vs both vs sweeps* is one ``min()`` over ``costs``.
 
-    The Pallas fused kernel is only a candidate on a TPU backend with
-    ``interpret=False`` — interpret mode is a correctness harness, never a
-    performance win, and the cost below models the compiled kernel.
+    Pricing coefficients come from the per-backend calibration table
+    (:mod:`repro.core.calibrate`), selected by ``backend`` — a resolved
+    :class:`~repro.kernels.backend.KernelBackend`, a spec string, or None
+    for ``jax.default_backend()``.  ``calibration`` overrides the table row
+    (tests / measured micro-runs); an explicit ``segment_cost`` overrides
+    just the launch-cost coefficient.  The fused kernel is a candidate only
+    where the calibration says a compiled fused dispatch exists
+    (``fused_max_rows > 0``, i.e. never on cpu) and the target is not the
+    interpreter — interpret mode is a correctness harness, never a
+    performance win; the cost below models the compiled kernel.
     """
-    if backend is None:
-        import jax
-
-        backend = jax.default_backend()
+    backend, cal_key, interpret = _plan_target(backend, interpret)
+    cal = calibration if calibration is not None         else get_calibration(cal_key)
+    seg_cost = cal.launch_cost if segment_cost is None else segment_cost
 
     costs: Dict[str, float] = {}
     # serial lax.scan: one segment, but every row is a latency-bound scan
@@ -359,29 +419,41 @@ def plan_strategy(
     # help the scan (rewrite only adds work to it), so serial is priced on
     # the untransformed system only.
     costs["serial"] = analysis.solve_flops + analysis.n * (
-        SERIAL_STEP_COST + SERIAL_STEP_COST_SCALE * analysis.n)
+        cal.serial_step_cost + cal.serial_step_cost_scale * analysis.n)
 
     def _levelset_costs(suffix: str, sched: Schedule,
                         co: Optional[Schedule], extra: float) -> None:
         costs[f"levelset{suffix}"] = extra + schedule_cost(
-            sched, unroll_threshold=0, segment_cost=segment_cost)
+            sched, unroll_threshold=0, segment_cost=seg_cost,
+            step_cost=cal.substep_cost, flop_cost=cal.gather_cost)
         costs[f"levelset_unroll{suffix}"] = extra + schedule_cost(
             sched, unroll_threshold=unroll_threshold,
-            segment_cost=segment_cost)
+            segment_cost=seg_cost, step_cost=cal.substep_cost,
+            flop_cost=cal.gather_cost)
         if co is not None:
             costs[f"levelset{suffix}+coarsen"] = extra + schedule_cost(
-                co, unroll_threshold=0, segment_cost=segment_cost)
+                co, unroll_threshold=0, segment_cost=seg_cost,
+                step_cost=cal.substep_cost, flop_cost=cal.gather_cost)
             costs[f"levelset_unroll{suffix}+coarsen"] = extra + schedule_cost(
                 co, unroll_threshold=unroll_threshold,
-                segment_cost=segment_cost)
+                segment_cost=seg_cost, step_cost=cal.substep_cost,
+                flop_cost=cal.gather_cost)
 
     def _fused_cost(suffix: str, sched: Schedule, extra: float) -> None:
-        if backend == "tpu" and not interpret and analysis.n <= _FUSED_VMEM_ROWS:
-            # whole solve in one kernel: one segment, x resident in VMEM;
-            # padded work bounded by the widest slab's K over all rows
-            kmax = max((s.K for s in sched.slabs), default=1)
-            costs[f"pallas_fused{suffix}"] = (
-                extra + 2 * kmax * analysis.n + analysis.n + segment_cost)
+        if interpret or analysis.n > cal.fused_max_rows:
+            return
+        # whole solve in one fused-layout dispatch: padded work bounded by
+        # the widest slab's K over all (lane-padded) rows.  The launch term
+        # is calibration-shaped: one sequential-grid dispatch on TPU, one
+        # launch per wavefront span on GPU.
+        kmax = max((s.K for s in sched.slabs), default=1)
+        lane = max(cal.lane_width, 1)
+        n_pad = -(-analysis.n // lane) * lane
+        launches = (sched.total_depth
+                    if cal.fused_num_launches == "per_level" else 1)
+        costs[f"pallas_fused{suffix}"] = (
+            extra + cal.gather_cost * (2 * kmax * n_pad + analysis.n)
+            + seg_cost * launches)
 
     _levelset_costs("", schedule, coarsened, 0.0)
     _fused_cost("", schedule, 0.0)
@@ -393,8 +465,8 @@ def plan_strategy(
         # k sweeps + 1 verification pass, each one fused ELL gather-sum over
         # all rows (2*K*n FMA-ish flops + n divides), one dispatch total.
         # The verification readback is the solve's single sync point.
-        costs["sweep"] = (sweep.k + 1) * (2 * sweep.ell_k * sweep.n
-                                          + sweep.n) + segment_cost
+        costs["sweep"] = cal.gather_cost * (sweep.k + 1) * (
+            2 * sweep.ell_k * sweep.n + sweep.n) + seg_cost
 
     best = min(costs, key=costs.get)
     parts = best.split("+")

@@ -61,6 +61,7 @@ def make_ic_preconditioner(
     rewrite: Optional[RewriteConfig] = RewriteConfig(thin_threshold=2),
     sweeps: Optional[int] = None,
     sweep_tol: Optional[float] = None,
+    backend=None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Given lower factor L (A ≈ L Lᵀ) build z = (L Lᵀ)^{-1} r.
 
@@ -88,11 +89,12 @@ def make_ic_preconditioner(
         from .sweep import SweepConfig
 
         fwd, bwd = SpTRSV.build_pair(
-            L, strategy="sweep", rewrite=None,
+            L, strategy="sweep", rewrite=None, backend=backend,
             sweep=SweepConfig(k=sweeps, residual_tol=sweep_tol,
                               fallback=None))
     else:
-        fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite)
+        fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite,
+                                     backend=backend)
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
         return bwd.solve(fwd.solve(r))
@@ -107,6 +109,7 @@ def make_ic_preconditioner_batched(
     rewrite: Optional[RewriteConfig] = RewriteConfig(thin_threshold=2),
     sweeps: Optional[int] = None,
     sweep_tol: Optional[float] = None,
+    backend=None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Batched z = (L Lᵀ)^{-1} R for R: (n, m).
 
@@ -116,7 +119,8 @@ def make_ic_preconditioner_batched(
     point so batched PCG call sites read explicitly and stay stable if the
     single-RHS path ever specializes."""
     return make_ic_preconditioner(L, strategy=strategy, rewrite=rewrite,
-                                  sweeps=sweeps, sweep_tol=sweep_tol)
+                                  sweeps=sweeps, sweep_tol=sweep_tol,
+                                  backend=backend)
 
 
 def pcg(A: CSRMatrix, b: jnp.ndarray,

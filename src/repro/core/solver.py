@@ -87,6 +87,22 @@ Newton steps).  ``layout="scatter"`` keeps the legacy per-segment scatter
 executors; refresh on it falls back to a cold rebuild.  ``solver.stats()``
 reports the packed-buffer bytes, padding waste and permutation status.
 
+Kernel backend (``backend=``)
+-----------------------------
+Pallas-backed strategies (``pallas_level`` / ``pallas_fused`` and the auto
+planner's pricing) dispatch through :mod:`repro.kernels.backend`:
+``backend=None`` (default) resolves from ``jax.default_backend()`` — ``tpu``
+→ compiled Mosaic lowerings, ``gpu`` → compiled pallas-triton lowerings,
+``cpu`` → the interpret backend (pallas has no CPU codegen).  Explicit specs
+``"tpu"`` / ``"gpu"`` / ``"interpret"`` / ``"interpret:gpu"`` pin the
+lowering family; the interpret variants run it under the pallas interpreter
+(how CI exercises both families without hardware).  The planner prices
+candidates from the backend's calibration row
+(:mod:`repro.core.calibrate` — launch cost, gather throughput, lane width,
+fused-dispatch shape).  The legacy ``interpret: bool`` knob remains as a
+deprecated alias: ``interpret=True`` maps to the resolved platform's
+interpret backend, ``interpret=False`` forces the compiled path.
+
 Strategies
 ----------
 ``serial``         row-serial scan (paper Algorithm 1 — correctness baseline)
@@ -174,6 +190,11 @@ from .codegen import (
 )
 from .csr import CSRMatrix
 from .levels import LevelSets, build_level_sets, build_reverse_level_sets
+from repro.kernels.backend import (
+    KernelBackend,
+    resolve_backend,
+    warn_interpret_deprecated,
+)
 from .packed import (
     PackedStats,
     build_packed_layout,
@@ -295,6 +316,7 @@ class SpTRSV:
     transpose: bool = False
     plan: Optional[PlanDecision] = None   # set when strategy="auto" planned
     layout: str = "scatter"
+    backend: str = "interpret"            # resolved kernel backend name
     packed_stats: Optional[PackedStats] = None
     sweep_stats: Optional[SweepStats] = None   # live, strategy="sweep" only
     _values: Optional[tuple] = None       # runtime value buffers (permuted)
@@ -316,7 +338,8 @@ class SpTRSV:
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
-        interpret: bool = True,
+        backend=None,
+        interpret: Optional[bool] = None,
         jit: bool = True,
         layout: str = "permuted",
         gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
@@ -362,7 +385,7 @@ class SpTRSV:
             bucket_pad_ratio=bucket_pad_ratio,
             coarsen=coarsen, sweep=sweep,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
-            interpret=interpret, jit=jit,
+            backend=backend, interpret=interpret, jit=jit,
             layout=layout, gather_unroll_max_k=gather_unroll_max_k,
             source=L, values_map=values_map,
         )
@@ -408,7 +431,8 @@ class SpTRSV:
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
-        interpret: bool = True,
+        backend=None,
+        interpret: Optional[bool] = None,
         jit: bool = True,
         layout: str = "permuted",
         gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
@@ -422,13 +446,18 @@ class SpTRSV:
         reordering into system storage) for :meth:`refresh`."""
         assert strategy in STRATEGIES, strategy
         assert layout in LAYOUTS, layout
+        if interpret is not None and not isinstance(backend, KernelBackend):
+            # internal recursion passes a resolved KernelBackend; only an
+            # actual caller-supplied bool earns the deprecation notice
+            warn_interpret_deprecated("SpTRSV.build")
+        bk = resolve_backend(backend, interpret=interpret)
         strategy_arg = strategy
         build_kwargs = dict(
             upper=upper, strategy=strategy_arg, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen, sweep=sweep,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
-            interpret=interpret, jit=jit, layout=layout,
+            backend=bk, jit=jit, layout=layout,
             gather_unroll_max_k=gather_unroll_max_k,
         )
         if source is None:
@@ -523,7 +552,7 @@ class SpTRSV:
             plan = plan_strategy(
                 analysis, _schedule(),
                 _coarsened(plan_ccfg) if plan_ccfg is not None else None,
-                unroll_threshold=unroll_threshold, interpret=interpret,
+                unroll_threshold=unroll_threshold, backend=bk,
                 rewritten=cands or None, sweep=sweep_cand)
             strategy = plan.strategy
             if strategy == "sweep":
@@ -605,10 +634,10 @@ class SpTRSV:
             schedule = _maybe_coarsen(_schedule())
             if permuted:
                 fn, values, repack, playout = level_ops.make_packed_solver(
-                    schedule, interpret=interpret)
+                    schedule, backend=bk)
                 packed_stats = playout.stats()
             else:
-                fn = level_ops.make_solver(schedule, interpret=interpret)
+                fn = level_ops.make_solver(schedule, backend=bk)
         elif strategy == "pallas_fused":
             from repro.kernels.sptrsv_fused import ops as fused_ops
 
@@ -617,7 +646,7 @@ class SpTRSV:
             schedule = _schedule()
             if permuted:
                 fn, values, repack, flay = fused_ops.make_packed_solver(
-                    schedule, interpret=interpret)
+                    schedule, backend=bk)
                 packed_stats = PackedStats(
                     permutation_applied=True,
                     value_bytes=int(flay.vals.nbytes + flay.diag.nbytes),
@@ -629,7 +658,7 @@ class SpTRSV:
                     num_segments=1,
                 )
             else:
-                fn = fused_ops.make_solver(schedule, interpret=interpret)
+                fn = fused_ops.make_solver(schedule, backend=bk)
         elif strategy == "distributed":
             from .dist import (
                 build_packed_dist_layout,
@@ -667,7 +696,7 @@ class SpTRSV:
                         strategy=scfg.fallback, rewrite=None,
                         unroll_threshold=unroll_threshold,
                         bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen,
-                        interpret=interpret, jit=jit, layout=layout,
+                        backend=bk, jit=jit, layout=layout,
                         gather_unroll_max_k=gather_unroll_max_k)
                 return fb_holder["s"].solve
 
@@ -734,6 +763,7 @@ class SpTRSV:
             transpose=upper,
             plan=plan,
             layout=layout,
+            backend=bk.name,
             packed_stats=packed_stats,
             sweep_stats=sweep_stats,
             _values=values,
@@ -867,6 +897,7 @@ class SpTRSV:
         return {
             "strategy": self.strategy,
             "layout": self.layout,
+            "backend": self.backend,
             "transpose": self.transpose,
             "n": self.n,
             "nnz": self.analysis.nnz,

@@ -1,13 +1,28 @@
-"""Pallas TPU kernels for the SpTRSV hot paths (the compute layer the paper
+"""Pallas kernels for the SpTRSV hot paths (the compute layer the paper
 optimizes with generated code):
 
 * ``sptrsv_level``  — one level (wavefront) as gather/FMA/reduce over an ELL slab
-* ``sptrsv_fused``  — the whole solve in ONE pallas_call, x resident in VMEM
-                      (the TPU analogue of removing all synchronization barriers)
+* ``sptrsv_fused``  — the whole solve in ONE dispatch: a single sequential-grid
+                      pallas_call on TPU (x resident in VMEM — the TPU analogue
+                      of removing all synchronization barriers), a
+                      level-scheduled launch walk of the same layout on GPU
 * ``spmv_ell``      — ELL SpMV (the rewriting method's per-solve b' = E b)
-* ``trsm_block``    — batched dense diagonal-block apply (MXU; paper ref [22])
+* ``trsm_block``    — batched dense diagonal-block apply (MXU / tensor cores)
 
-Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
-ref.py (pure-jnp oracle).  Kernels are validated in interpret mode on CPU;
-TPU v5e is the lowering target.
+Each package: ``lowering_tpu.py`` (Mosaic) and ``lowering_gpu.py``
+(pallas-triton) exposing the same entry points, ``ops.py`` (jit wrapper that
+dispatches on a ``backend=`` knob via :mod:`repro.kernels.backend`), and
+``ref.py`` (pure-jnp oracle).  ``kernel.py`` remains as a back-compat shim
+re-exporting the TPU lowering.  Both lowering families are validated under
+the pallas interpreter on CPU (``backend="interpret"`` / ``"interpret:gpu"``);
+TPU v5e and CUDA GPUs are the compiled targets.
 """
+from repro.kernels.backend import (  # noqa: F401
+    BACKENDS,
+    KernelBackend,
+    default_backend_name,
+    resolve_backend,
+)
+
+__all__ = ["KernelBackend", "BACKENDS", "resolve_backend",
+           "default_backend_name"]

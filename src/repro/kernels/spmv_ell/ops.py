@@ -1,17 +1,26 @@
-"""Jit'd wrapper: CSR -> padded ELL, then the Pallas SpMV."""
+"""Backend-dispatched wrapper: CSR -> padded ELL, then the Pallas SpMV on
+the selected backend (TPU Mosaic, pallas-triton, or either interpreted)."""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codegen import build_ell
 from repro.core.csr import CSRMatrix
+from repro.kernels.backend import resolve_backend
 
-from .kernel import spmv
+from . import lowering_gpu, lowering_tpu
 
-__all__ = ["make_spmv"]
+__all__ = ["make_spmv", "select_lowering"]
+
+
+def select_lowering(backend=None):
+    """Lowering module for a backend spec — the single dispatch point the
+    backend-matrix CI job asserts on."""
+    bk = resolve_backend(backend)
+    return lowering_gpu if bk.platform == "gpu" else lowering_tpu
 
 
 def _ceil_to(v: int, m: int) -> int:
@@ -19,8 +28,14 @@ def _ceil_to(v: int, m: int) -> int:
 
 
 def make_spmv(
-    M: CSRMatrix, *, interpret: bool = True, block: int = 1024
+    M: CSRMatrix,
+    *,
+    backend=None,
+    interpret: Optional[bool] = None,
+    block: int = 1024,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
     ell = build_ell(M)
     n = M.n
     n_pad = _ceil_to(n, block)
@@ -34,7 +49,8 @@ def make_spmv(
     def matvec(v: jnp.ndarray) -> jnp.ndarray:
         dt = v.dtype
         v_pad = jnp.zeros((m_pad,), dt).at[: v.shape[0]].set(v)
-        y = spmv(v_pad, cols_d, vals_d.astype(dt), block=block, interpret=interpret)
+        y = low.spmv(v_pad, cols_d, vals_d.astype(dt), block=block,
+                     interpret=bk.interpret)
         return y[:n]
 
     return matvec

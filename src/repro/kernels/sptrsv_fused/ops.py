@@ -1,5 +1,7 @@
-"""Jit'd wrapper: pack a Schedule into the fused level-order layout and
-solve with one pallas_call.
+"""Backend-dispatched wrapper: pack a Schedule into the fused level-order
+layout and solve it — one sequential-grid ``pallas_call`` on the TPU
+backend, a level-scheduled launch walk of the same layout on the GPU
+backend (see the lowering modules).
 
 Direction-agnostic: backward (transpose) schedules permute rows by *reverse*
 level order, so all dependency positions still precede their consumers in
@@ -14,10 +16,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codegen import Schedule
+from repro.kernels.backend import resolve_backend
 
-from .kernel import fused_solve, fused_solve_batched
+from . import lowering_gpu, lowering_tpu
 
-__all__ = ["FusedLayout", "build_layout", "make_solver", "make_packed_solver"]
+__all__ = ["FusedLayout", "build_layout", "make_solver", "make_packed_solver",
+           "select_lowering"]
+
+
+def select_lowering(backend=None):
+    """Lowering module for a backend spec — the single dispatch point the
+    backend-matrix CI job asserts on."""
+    bk = resolve_backend(backend)
+    return lowering_gpu if bk.platform == "gpu" else lowering_tpu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +41,10 @@ class FusedLayout:
                      pad position whose value is always 0).
     ``val_src``/``diag_src`` map packed values back to the source matrix's
     ``data`` indices (-1 padding) — the value-only refresh maps.
+    ``spans``        chunk-aligned ``(offset, padded_rows)`` of each
+                     wavefront — the launch boundaries of the GPU
+                     (level-scheduled) lowering; the TPU grid walk ignores
+                     them.
     """
 
     n: int
@@ -43,6 +58,7 @@ class FusedLayout:
     diag: np.ndarray
     val_src: Optional[np.ndarray] = None
     diag_src: Optional[np.ndarray] = None
+    spans: tuple = ()
 
     @property
     def padded_flops(self) -> int:
@@ -91,12 +107,19 @@ def build_layout(schedule: Schedule, chunk: int = 512) -> FusedLayout:
         n=n, n_pad=n_pad, chunk=chunk, K=K,
         perm_rows=perm_rows, pos=pos, cols=cols, vals=vals, diag=diag,
         val_src=val_src, diag_src=diag_src,
+        spans=tuple((int(o), int(rp)) for o, rp in spans),
     )
 
 
 def make_solver(
-    schedule: Schedule, *, interpret: bool = True, chunk: int = 512
+    schedule: Schedule,
+    *,
+    backend=None,
+    interpret: Optional[bool] = None,
+    chunk: int = 512,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
     lay = build_layout(schedule, chunk)
     perm_rows = jnp.asarray(lay.perm_rows)
     pos = jnp.asarray(lay.pos[: lay.n])
@@ -104,15 +127,18 @@ def make_solver(
     vals = jnp.asarray(lay.vals)
     diag = jnp.asarray(lay.diag)
 
+    kw = {"spans": lay.spans} if bk.platform == "gpu" else {}
+
     def solve(b: jnp.ndarray) -> jnp.ndarray:
-        """b: (n,) or (n, m) — one fused kernel either way."""
+        """b: (n,) or (n, m) — one fused dispatch either way (TPU: one
+        sequential-grid kernel; GPU: one launch per wavefront span)."""
         dt = b.dtype
-        kern = fused_solve_batched if b.ndim == 2 else fused_solve
+        kern = low.fused_solve_batched if b.ndim == 2 else low.fused_solve
         b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
         bl_perm = b_ext[perm_rows]  # pad rows -> b_ext[n] = 0
         xp = kern(
             bl_perm, cols, vals.astype(dt), diag.astype(dt),
-            chunk=lay.chunk, interpret=interpret,
+            chunk=lay.chunk, interpret=bk.interpret, **kw,
         )
         return xp[pos]
 
@@ -120,7 +146,11 @@ def make_solver(
 
 
 def make_packed_solver(
-    schedule: Schedule, *, interpret: bool = True, chunk: int = 512
+    schedule: Schedule,
+    *,
+    backend=None,
+    interpret: Optional[bool] = None,
+    chunk: int = 512,
 ):
     """Refresh-capable fused solver: identical kernel and layout to
     :func:`make_solver` (the fused kernel already executes in permuted
@@ -128,6 +158,8 @@ def make_packed_solver(
     arguments so a value-only refresh swaps them without re-tracing.
 
     Returns ``(solve(b, values), values0, repack, layout)``."""
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
     lay = build_layout(schedule, chunk)
     perm_rows = jnp.asarray(lay.perm_rows)
     pos = jnp.asarray(lay.pos[: lay.n])
@@ -141,16 +173,18 @@ def make_packed_solver(
         return (jnp.asarray(gather_src(target_data, vsrc, 0.0, lay.vals.dtype)),
                 jnp.asarray(gather_src(target_data, dsrc, 1.0, lay.diag.dtype)))
 
+    kw = {"spans": lay.spans} if bk.platform == "gpu" else {}
+
     def solve(b: jnp.ndarray, values) -> jnp.ndarray:
-        """b: (n,) or (n, m) — one fused kernel either way."""
+        """b: (n,) or (n, m) — one fused dispatch either way."""
         vals, diag = values
         dt = b.dtype
-        kern = fused_solve_batched if b.ndim == 2 else fused_solve
+        kern = low.fused_solve_batched if b.ndim == 2 else low.fused_solve
         b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
         bl_perm = b_ext[perm_rows]  # pad rows -> b_ext[n] = 0
         xp = kern(
             bl_perm, cols, vals.astype(dt), diag.astype(dt),
-            chunk=lay.chunk, interpret=interpret,
+            chunk=lay.chunk, interpret=bk.interpret, **kw,
         )
         return xp[pos]
 

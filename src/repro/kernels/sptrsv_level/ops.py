@@ -1,4 +1,11 @@
-"""Jit'd wrapper: whole-matrix level-set solve using the level kernel.
+"""Backend-dispatched wrapper: whole-matrix level-set solve using the level
+kernel.
+
+``make_solver(schedule, backend=...)`` packs the schedule once (the packing
+is lowering-agnostic) and dispatches each segment to the selected backend's
+level kernel — TPU Mosaic (:mod:`.lowering_tpu`), pallas-triton
+(:mod:`.lowering_gpu`), or either under the pallas interpreter
+(``backend="interpret"`` / ``"interpret:gpu"``).
 
 Direction-agnostic: a backward (transpose) :class:`Schedule` — column-packed
 slabs over reverse level sets — runs through the same kernels; nothing here
@@ -11,7 +18,7 @@ kernel call per *super*-level instead of one per level, so program size and
 trace/compile time stop scaling with the level count."""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,10 +26,18 @@ import numpy as np
 
 from repro.core.codegen import Schedule, stack_sub_slabs
 from repro.core.packed import build_packed_layout, pack_values
+from repro.kernels.backend import resolve_backend
 
-from .kernel import level_solve_blocks, level_solve_blocks_batched
+from . import lowering_gpu, lowering_tpu
 
-__all__ = ["make_solver", "make_packed_solver"]
+__all__ = ["make_solver", "make_packed_solver", "select_lowering"]
+
+
+def select_lowering(backend=None):
+    """Lowering module for a backend spec — the single dispatch point the
+    backend-matrix CI job asserts on."""
+    bk = resolve_backend(backend)
+    return lowering_gpu if bk.platform == "gpu" else lowering_tpu
 
 
 def _ceil_to(v: int, m: int) -> int:
@@ -30,10 +45,18 @@ def _ceil_to(v: int, m: int) -> int:
 
 
 def make_solver(
-    schedule: Schedule, *, interpret: bool = True, block_rows: int = 512
+    schedule: Schedule,
+    *,
+    backend=None,
+    interpret: Optional[bool] = None,
+    block_rows: int = 512,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Build solve(b) that runs one Pallas kernel per segment (one per level,
-    or one per coarsened chain via ``fori_loop``)."""
+    or one per coarsened chain via ``fori_loop``) on the given backend.
+    ``interpret`` is the deprecated boolean alias (see
+    :func:`repro.kernels.backend.resolve_backend`)."""
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
     n = schedule.n
     n_pad = _ceil_to(n + 1, 128)
     packed = []
@@ -81,7 +104,8 @@ def make_solver(
     def solve(b: jnp.ndarray) -> jnp.ndarray:
         """b: (n,) or (n, m) — batched RHS solve all columns in one pass."""
         dt = b.dtype
-        kern = level_solve_blocks_batched if b.ndim == 2 else level_solve_blocks
+        kern = (low.level_solve_blocks_batched if b.ndim == 2
+                else low.level_solve_blocks)
         b_ext = jnp.concatenate([b, jnp.zeros((1,) + b.shape[1:], dt)])
         x = jnp.zeros((n_pad,) + b.shape[1:], dt)
 
@@ -89,7 +113,7 @@ def make_solver(
             bl = b_ext[jnp.minimum(rows, n)]
             xl = kern(
                 x, bl, cols, vals.astype(dt), diag.astype(dt),
-                block_rows=br, interpret=interpret,
+                block_rows=br, interpret=bk.interpret,
             )
             x = x.at[rows].set(xl)
             return x.at[n].set(0.0)  # pad rows target the scratch slot
@@ -110,7 +134,11 @@ def make_solver(
 
 
 def make_packed_solver(
-    schedule: Schedule, *, interpret: bool = True, block_rows: int = 512
+    schedule: Schedule,
+    *,
+    backend=None,
+    interpret: Optional[bool] = None,
+    block_rows: int = 512,
 ):
     """Permuted-space packed variant: one kernel call per segment, but the
     level's solution lands with a contiguous ``dynamic_update_slice`` at a
@@ -119,6 +147,8 @@ def make_packed_solver(
     ``SpTRSV.refresh`` swaps values without re-tracing any kernel).
 
     Returns ``(solve(b, values), values0, repack, layout)``."""
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
 
     def _pad(r):
         return _ceil_to(r, block_rows if r > block_rows // 4 else 128)
@@ -143,7 +173,8 @@ def make_packed_solver(
         dt = b.dtype
         vf = vals_flat.astype(dt)
         df = diag_flat.astype(dt)
-        kern = level_solve_blocks_batched if b.ndim == 2 else level_solve_blocks
+        kern = (low.level_solve_blocks_batched if b.ndim == 2
+                else low.level_solve_blocks)
         bhat = b[perm]
         if n_pad > n:
             bhat = jnp.concatenate(
@@ -168,7 +199,7 @@ def make_packed_solver(
                     o = _sub[t]
                     bw = jax.lax.dynamic_slice_in_dim(bhat, o, _Rp)
                     xl = kern(xc, bw, _c[t], _v[t], _d[t],
-                              block_rows=_br, interpret=interpret)
+                              block_rows=_br, interpret=bk.interpret)
                     return jax.lax.dynamic_update_slice_in_dim(xc, xl, o, 0)
 
                 x = jax.lax.fori_loop(0, d, body, x)
@@ -181,7 +212,7 @@ def make_packed_solver(
                     df, seg.diag_off, seg.diag_off + Rp)
                 bw = jax.lax.slice_in_dim(bhat, seg.off, seg.off + Rp)
                 xl = kern(x, bw, cols_s, vals_s, diag_s,
-                          block_rows=br, interpret=interpret)
+                          block_rows=br, interpret=bk.interpret)
                 x = jax.lax.dynamic_update_slice_in_dim(x, xl, seg.off, 0)
         return x[pos]
 

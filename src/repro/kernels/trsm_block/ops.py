@@ -12,21 +12,35 @@ reordered matrices — the paper's ref [22] scenario).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.csr import CSRMatrix
+from repro.kernels.backend import resolve_backend
 
-from .kernel import block_apply
+from . import lowering_gpu, lowering_tpu
 
-__all__ = ["make_block_solver"]
+__all__ = ["make_block_solver", "select_lowering"]
+
+
+def select_lowering(backend=None):
+    """Lowering module for a backend spec — the single dispatch point the
+    backend-matrix CI job asserts on."""
+    bk = resolve_backend(backend)
+    return lowering_gpu if bk.platform == "gpu" else lowering_tpu
 
 
 def make_block_solver(
-    L: CSRMatrix, *, T: int = 128, interpret: bool = True
+    L: CSRMatrix,
+    *,
+    T: int = 128,
+    backend=None,
+    interpret: Optional[bool] = None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    bk = resolve_backend(backend, interpret=interpret)
+    low = select_lowering(bk)
     n = L.n
     nb = int(np.ceil(n / T))
     n_pad = nb * T
@@ -67,8 +81,9 @@ def make_block_solver(
         for blk in range(nb):
             s = jnp.sum(vals_d[blk].astype(dt) * x[cols_d[blk]], axis=0)  # (T,)
             rhs = (bp[blk * T : (blk + 1) * T] - s)[None, :]  # (1, T)
-            xb = block_apply(
-                dinv_d[blk][None].astype(dt), rhs, batch_block=1, interpret=interpret
+            xb = low.block_apply(
+                dinv_d[blk][None].astype(dt), rhs, batch_block=1,
+                interpret=bk.interpret,
             )[0]
             x = x.at[blk * T : (blk + 1) * T].set(xb)
         return x[:n]

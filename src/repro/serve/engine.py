@@ -185,9 +185,11 @@ class SolveEngine:
         which is the right default for a serving tier that sees arbitrary
         factors.  ``transpose_too=True`` builds the backward solver from the
         same shared analysis (``SpTRSV.build_pair``) so transpose requests
-        are servable.  Extra keyword arguments (``rewrite=``, ``coarsen=``,
-        ``bucket_pad_ratio=``, ...) pass through to the builder; an explicit
-        ``rewrite=`` overrides the planner's transform choice."""
+        are servable.  Extra keyword arguments (``backend=``, ``rewrite=``,
+        ``coarsen=``, ``bucket_pad_ratio=``, ...) pass through to the
+        builder; an explicit ``rewrite=`` overrides the planner's transform
+        choice, and ``backend=`` pins the kernel lowering family (default:
+        resolved from ``jax.default_backend()``)."""
         from repro.core import SpTRSV
 
         if transpose_too:

@@ -54,12 +54,27 @@ GRID = list(itertools.product(STRATEGIES, sorted(POLICIES), LAYOUTS,
 # solver variants (full grid x all patterns is the nightly's job)
 _STRIDE = 17
 
+# GPU (pallas-triton) lowering grid: the pallas strategies re-run under the
+# interpret:gpu backend — same layouts/transpose/batch dimensions, so the
+# triton-style kernels get the identical oracle treatment without hardware
+GPU_STRATEGIES = ["pallas_level", "pallas_fused"]
+GPU_GRID = list(itertools.product(GPU_STRATEGIES, sorted(POLICIES), LAYOUTS,
+                                  [False, True], [0, 3]))
+_GPU_STRIDE = 7
+
 
 def _combos_for(pattern: str, exhaustive: bool):
     if exhaustive:
         return GRID
     phase = PATTERNS.index(pattern)
     return GRID[phase::_STRIDE]
+
+
+def _gpu_combos_for(pattern: str, exhaustive: bool):
+    if exhaustive:
+        return GPU_GRID
+    phase = PATTERNS.index(pattern)
+    return GPU_GRID[phase::_GPU_STRIDE]
 
 
 def _oracle(L, b, transpose):
@@ -110,12 +125,14 @@ def _check(L, pattern, x, b, x_ref, transpose, combo, seed):
             f"— repro dumped to {path}\n{err}") from None
 
 
-def _run_combo(L, pattern, seed, combo, mesh=None):
+def _run_combo(L, pattern, seed, combo, mesh=None, backend=None):
     strategy, policy, layout, transpose, batch = combo
     kw = dict(strategy=strategy, layout=layout, transpose=transpose,
               rewrite=POLICIES[policy])
     if strategy == "distributed":
         kw["mesh"] = mesh
+    if backend is not None:
+        kw["backend"] = backend
     s = SpTRSV.build(L, **kw)
     rng = np.random.default_rng(10_000 + seed)
     if batch:
@@ -133,6 +150,18 @@ def test_differential_slice(pattern):
     with enable_x64():
         for combo in _combos_for(pattern, exhaustive=False):
             _run_combo(L, pattern, 1, combo)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_differential_gpu_backend_slice(pattern):
+    """Tier-1: the pallas-triton (GPU) lowerings, executed under the
+    interpret backend (``backend="interpret:gpu"``), on a rotating slice of
+    the strategy × policy × layout × transpose × batch grid — the same
+    oracle and tolerances as the TPU-lowering slice."""
+    L = pathological(pattern, n=72, seed=1)
+    with enable_x64():
+        for combo in _gpu_combos_for(pattern, exhaustive=False):
+            _run_combo(L, pattern, 1, combo, backend="interpret:gpu")
 
 
 # --------------------------------------------------------------------------
@@ -180,3 +209,5 @@ def test_differential_exhaustive(pattern):
                     ["distributed"], sorted(POLICIES), LAYOUTS,
                     [False, True], [0, 3]):
                 _run_combo(L, pattern, seed, combo, mesh=mesh)
+            for combo in GPU_GRID:
+                _run_combo(L, pattern, seed, combo, backend="interpret:gpu")
