@@ -73,6 +73,14 @@ class BackendCalibration:
                                dispatch (TPU sequential grid); ``"per_level"``
                                — one launch per wavefront span (GPU
                                level-scheduled walk)
+    ``gemm_cost``              relative price of one *dense* batched-GEMM /
+                               TRSM flop of the blocked executor's diagonal-
+                               block apply — contiguous, no index stream, so
+                               cheaper than a gathered flop everywhere and
+                               dramatically so on MXU/tensor-core hardware
+    ``trsm_cost``              fixed per-diagonal-block overhead of the
+                               blocked apply (reshape + batched dispatch
+                               bookkeeping), in FLOP-equivalents
     ``source``                 ``"default"`` (shipped) or ``"measured"``
                                (``benchmarks/calibrate.py`` micro-run)
     """
@@ -86,6 +94,8 @@ class BackendCalibration:
     lane_width: int = 8
     fused_max_rows: int = 0
     fused_num_launches: str = "per_level"
+    gemm_cost: float = 0.25
+    trsm_cost: float = 64.0
     source: str = "default"
 
     def __post_init__(self):
@@ -107,6 +117,8 @@ DEFAULT_CALIBRATIONS: Dict[str, BackendCalibration] = {
         lane_width=128,
         fused_max_rows=_TPU_FUSED_VMEM_ROWS,
         fused_num_launches="one",
+        gemm_cost=0.05,   # MXU: dense block flops are nearly free
+        trsm_cost=32.0,
     ),
     # Kernel launches ARE the barriers (pricier than a TPU grid step); the
     # fused layout runs one launch per wavefront span; x in GMEM, so the
@@ -119,6 +131,8 @@ DEFAULT_CALIBRATIONS: Dict[str, BackendCalibration] = {
         lane_width=32,
         fused_max_rows=50_000_000,
         fused_num_launches="per_level",
+        gemm_cost=0.1,    # tensor cores; still pays GMEM block loads
+        trsm_cost=48.0,
     ),
 }
 
@@ -150,11 +164,23 @@ def save_calibrations(path: Union[str, Path],
 def load_calibrations(path: Union[str, Path]) -> Dict[str, BackendCalibration]:
     """Read a calibration table written by :func:`save_calibrations` (or by
     ``benchmarks/calibrate.py``).  Unknown keys in a row are ignored so old
-    tables survive field additions."""
-    raw = json.loads(Path(path).read_text())
+    tables survive field additions; a file that is not a JSON object of
+    per-backend rows raises ``ValueError`` naming the path."""
+    try:
+        raw = json.loads(Path(path).read_text())
+    except json.JSONDecodeError as err:
+        raise ValueError(f"malformed calibration file {path}: {err}") from None
+    if not isinstance(raw, dict):
+        raise ValueError(
+            f"malformed calibration file {path}: expected a JSON object of "
+            f"backend rows, got {type(raw).__name__}")
     fields = {f.name for f in dataclasses.fields(BackendCalibration)}
     table = {}
     for key, row in raw.items():
+        if not isinstance(row, dict):
+            raise ValueError(
+                f"malformed calibration file {path}: row {key!r} is not an "
+                f"object")
         kw = {k: v for k, v in row.items() if k in fields}
         kw.setdefault("backend", key)
         table[key] = BackendCalibration(**kw)

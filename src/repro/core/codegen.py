@@ -44,6 +44,7 @@ __all__ = [
     "serial_arrays",
     "make_serial_solver",
     "make_levelset_solver",
+    "make_blocked_solver",
     "make_rhs_transform",
     "ell_spmv",
 ]
@@ -597,6 +598,51 @@ def make_levelset_solver(
             else:
                 x = _apply_slab(x, b, slab, gather_unroll_max_k)
         return x[:n] if chained else x
+
+    return solve
+
+
+def make_blocked_solver(
+    bsched,
+    *,
+    backend=None,
+    kernel: str = "auto",
+    gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Blocked (supernodal) executor over a
+    :class:`~repro.core.coarsen.BlockSchedule`, scatter layout: per
+    super-level one padded ELL panel gather-sum (the off-block update) and
+    one batched dense diagonal-block apply
+
+        x_blk = D⁻¹_blk (b_blk − Panel · x_prev)
+
+    through :func:`repro.kernels.trsm_block.ops.make_block_apply` — the
+    batched-TRSM step of the supernodal decomposition.  ``b`` may be
+    ``(n,)`` or ``(n, m)``.  Lanes are block-major with sentinel row ``n``
+    for padding, so ``x`` carries one scratch slot (sliced off on return);
+    scalar rows are simply T=1 blocks — the same code path."""
+    from repro.kernels.trsm_block.ops import make_block_apply
+
+    apply_blocks = make_block_apply(backend, kernel=kernel)
+    n = bsched.n
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        dt = b.dtype
+        b_ext = jnp.concatenate(
+            [b, jnp.zeros((1,) + b.shape[1:], dtype=dt)])
+        x = jnp.zeros((n + 1,) + b.shape[1:], dtype=dt)
+        for slab in bsched.slabs:
+            lane = jnp.asarray(slab.lane_row)
+            s = _gather_sum(jnp.asarray(slab.vals, dt),
+                            jnp.asarray(slab.cols), x,
+                            unroll_max_k=gather_unroll_max_k)
+            rhs = b_ext[lane] - s                       # (B*T[, m])
+            rhs = rhs.reshape((slab.B, slab.T) + b.shape[1:])
+            xb = apply_blocks(jnp.asarray(slab.dinv, dt), rhs)
+            x = x.at[lane].set(
+                xb.reshape((slab.B * slab.T,) + b.shape[1:]))
+            x = x.at[n].set(jnp.zeros(b.shape[1:], dtype=dt))
+        return x[:n]
 
     return solve
 

@@ -62,11 +62,16 @@ __all__ = [
     "PackedSegment",
     "PackedLayout",
     "PackedStats",
+    "PackedBlockSegment",
+    "PackedBlockedLayout",
     "build_packed_layout",
+    "build_packed_blocked_layout",
     "ell_packed_stats",
     "gather_src",
     "pack_values",
+    "pack_blocked_values",
     "make_packed_levelset_solver",
+    "make_packed_blocked_solver",
     "make_packed_serial_solver",
     "make_packed_rhs_transform",
 ]
@@ -379,6 +384,184 @@ def make_packed_levelset_solver(
             else:
                 x = _plain_segment(x, bhat, seg, cols_flat, vf, df,
                                    gather_unroll_max_k)
+        return x[pos]
+
+    return solve
+
+
+# --------------------------------------------------------------------------
+# Blocked (supernodal) packed layout
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackedBlockSegment:
+    """Geometry of one super-level inside the packed blocked buffers.
+
+    The segment's real rows own permuted positions ``[off, off + R)``; its
+    lane space is ``B * T`` block-major lanes, of which ``lane_idx`` are the
+    real ones (the rest are padding).  ``val_off`` indexes the flat panel
+    buffers (``K * B * T`` entries), ``dinv_off`` the flat dense-block
+    buffers (``B * T * T`` entries)."""
+
+    off: int
+    R: int
+    B: int
+    T: int
+    K: int
+    val_off: int
+    dinv_off: int
+    lane_idx: np.ndarray      # (R,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBlockedLayout:
+    """Permuted-space packed form of a
+    :class:`~repro.core.coarsen.BlockSchedule`.
+
+    Same contract as :class:`PackedLayout`: ``cols_flat`` holds permuted
+    *positions*; ``vals_src`` (panel values) and ``diag_src`` (dense
+    diagonal-block entries) map every packed value back into the target
+    matrix's ``data`` array (−1 = padding / structural zero), so
+    :func:`pack_blocked_values` re-packs both runtime buffers — including
+    the batched block re-inversion — from new values alone.  ``pad_eye_flat``
+    is the identity padding added before every inversion."""
+
+    n: int
+    nnz: int
+    perm: np.ndarray
+    pos: np.ndarray
+    segments: tuple
+    cols_flat: np.ndarray
+    vals_flat: np.ndarray
+    vals_src: np.ndarray
+    dinv_flat: np.ndarray     # float64 inverted blocks, concatenated raveled
+    diag_src: np.ndarray      # int64, aligned with dinv_flat
+    pad_eye_flat: np.ndarray  # float64, aligned with dinv_flat
+
+    def stats(self) -> PackedStats:
+        item = self.vals_flat.itemsize
+        pad = int((self.vals_src < 0).sum() + (self.diag_src < 0).sum())
+        return PackedStats(
+            permutation_applied=True,
+            value_bytes=self.vals_flat.nbytes + self.dinv_flat.nbytes,
+            index_bytes=self.cols_flat.nbytes,
+            padded_value_bytes=pad * item,
+            n_pad=self.n,
+            num_segments=len(self.segments),
+        )
+
+
+def build_packed_blocked_layout(bsched) -> PackedBlockedLayout:
+    """Lower a blocked schedule into permuted-space flat buffers: the
+    blocked execution order (super-level by super-level, block-major)
+    defines ``perm``; panel columns are remapped to positions once here."""
+    n = bsched.n
+    perm = bsched.perm()
+    assert perm.size == n, (perm.size, n)
+    pos = np.empty(n, dtype=np.int64)
+    pos[perm] = np.arange(n, dtype=np.int64)
+    pos32 = pos.astype(np.int32)
+
+    segments = []
+    cols_b, vals_b, vsrc_b, dinv_b, dsrc_b, eye_b = [], [], [], [], [], []
+    off = voff = doff = 0
+    dtype = (bsched.slabs[0].vals.dtype if bsched.slabs else np.float64)
+    for slab in bsched.slabs:
+        B, T, K, R = slab.B, slab.T, slab.K, slab.R
+        lane_idx = np.nonzero(slab.lane_row < n)[0].astype(np.int32)
+        segments.append(PackedBlockSegment(
+            off=off, R=R, B=B, T=T, K=K, val_off=voff, dinv_off=doff,
+            lane_idx=lane_idx))
+        # padded panel lanes keep column 0 -> position pos[0]: its value is
+        # 0 and x starts zero-filled, so the gather is a no-op everywhere
+        cols_b.append(pos32[slab.cols].ravel())
+        vals_b.append(slab.vals.ravel())
+        vsrc_b.append(slab.val_src.ravel())
+        dinv_b.append(slab.dinv.ravel())
+        dsrc_b.append(slab.diag_src.ravel())
+        eye_b.append(slab.pad_eye.ravel())
+        off += R
+        voff += K * B * T
+        doff += B * T * T
+    assert off == n, (off, n)
+
+    def cat(blocks, dt):
+        return (np.concatenate(blocks).astype(dt, copy=False) if blocks
+                else np.zeros(0, dtype=dt))
+
+    return PackedBlockedLayout(
+        n=n, nnz=bsched.nnz, perm=perm, pos=pos, segments=tuple(segments),
+        cols_flat=cat(cols_b, np.int32),
+        vals_flat=cat(vals_b, dtype),
+        vals_src=cat(vsrc_b, np.int64),
+        dinv_flat=cat(dinv_b, np.float64),
+        diag_src=cat(dsrc_b, np.int64),
+        pad_eye_flat=cat(eye_b, np.float64),
+    )
+
+
+def pack_blocked_values(layout: PackedBlockedLayout, data: np.ndarray):
+    """Re-pack the blocked runtime buffers for new ``data`` of the same
+    pattern: one vectorized gather for the panel values, one gather +
+    identity padding + batched ``np.linalg.inv`` (float64, host-side) for
+    the dense diagonal blocks.  O(nnz + Σ B·T³) with no analysis and no
+    executor re-trace — the compiled solve is reused outright."""
+    vals = gather_src(data, layout.vals_src, 0.0, layout.vals_flat.dtype)
+    dense = (gather_src(data, layout.diag_src, 0.0, np.float64)
+             + layout.pad_eye_flat)
+    dinv = np.empty_like(layout.dinv_flat)
+    for seg in layout.segments:
+        size = seg.B * seg.T * seg.T
+        blk = dense[seg.dinv_off : seg.dinv_off + size].reshape(
+            seg.B, seg.T, seg.T)
+        dinv[seg.dinv_off : seg.dinv_off + size] = \
+            np.linalg.inv(blk).ravel()
+    return jnp.asarray(vals), jnp.asarray(dinv)
+
+
+def make_packed_blocked_solver(
+    layout: PackedBlockedLayout,
+    *,
+    backend=None,
+    kernel: str = "auto",
+    gather_unroll_max_k: int = GATHER_UNROLL_MAX_K,
+):
+    """Permuted-space blocked (supernodal) executor.
+
+    Returns ``solve(b, values)`` with ``values = (vals_flat, dinv_flat)`` as
+    runtime buffers (from :func:`pack_blocked_values`).  Per super-level:
+    one panel gather-sum, one batched dense diagonal-block apply
+    (:func:`repro.kernels.trsm_block.ops.make_block_apply`), one contiguous
+    ``dynamic_update_slice`` write.  ``b`` may be ``(n,)`` or ``(n, m)``."""
+    from repro.kernels.trsm_block.ops import make_block_apply
+
+    apply_blocks = make_block_apply(backend, kernel=kernel)
+    n = layout.n
+    cols_flat = jnp.asarray(layout.cols_flat)
+    perm = jnp.asarray(layout.perm)
+    pos = jnp.asarray(layout.pos)
+
+    def solve(b: jnp.ndarray, values) -> jnp.ndarray:
+        vals_flat, dinv_flat = values
+        dt = b.dtype
+        vf = vals_flat.astype(dt)
+        dvf = dinv_flat.astype(dt)
+        bhat = b[perm]
+        x = jnp.zeros((n,) + b.shape[1:], dt)
+        for seg in layout.segments:
+            BT = seg.B * seg.T
+            cols = _slice_seg(cols_flat, seg.val_off, seg.K * BT).reshape(
+                seg.K, BT)
+            vals = _slice_seg(vf, seg.val_off, seg.K * BT).reshape(
+                seg.K, BT)
+            s = _gather_sum(vals, cols, x, unroll_max_k=gather_unroll_max_k)
+            bw = jax.lax.slice_in_dim(bhat, seg.off, seg.off + seg.R)
+            lane = jnp.asarray(seg.lane_idx)
+            rhs = jnp.zeros((BT,) + b.shape[1:], dt).at[lane].set(bw) - s
+            dinv = _slice_seg(dvf, seg.dinv_off, BT * seg.T).reshape(
+                seg.B, seg.T, seg.T)
+            xb = apply_blocks(dinv, rhs.reshape((seg.B, seg.T) + b.shape[1:]))
+            xl = xb.reshape((BT,) + b.shape[1:])[lane]
+            x = jax.lax.dynamic_update_slice_in_dim(x, xl, seg.off, 0)
         return x[pos]
 
     return solve

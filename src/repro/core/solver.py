@@ -122,12 +122,27 @@ Strategies
                    columns (``sweep=SweepConfig(k, residual_tol,
                    fallback)``).  The only executor whose per-solve cost is
                    independent of the level count.
+``blocked``        supernodal/blocked solve: contiguous row runs with
+                   (near-)identical column structure are amalgamated into
+                   dense diagonal blocks (:func:`repro.core.levels.
+                   detect_supernodes`, relaxation knob
+                   ``supernodes=SupernodeConfig(relax=...)``); each
+                   super-level applies the off-diagonal panel as one
+                   gather/FMA pass and the inverted diagonal blocks as a
+                   batched small-TRSM (``kernels/trsm_block``,
+                   ``block_kernel="auto"|"pallas"|"jnp"``).  A scalar row
+                   is just a 1×1 block, so the executor degrades
+                   gracefully on unstructured factors.
 ``auto``           transform planner (:func:`repro.core.coarsen.plan_strategy`):
                    serial for chain-like DAGs, (coarsened) level-set
                    executors for wavefront-parallel matrices, the fused
                    Pallas kernel for VMEM-sized systems on a real TPU,
                    sync-free sweeps when the convergence model certifies a
-                   cheap-enough sweep count — and, for barrier-dominated
+                   cheap-enough sweep count, the blocked executor when
+                   supernode amalgamation finds dense-enough diagonal
+                   blocks (mean block size ≥ 1.5) and the calibrated
+                   gemm/trsm rates price it below the level-set
+                   candidates — and, for barrier-dominated
                    schedules, whether to rewrite the matrix first (``thin``
                    vs ``critical_path`` policy) under the same cost model.
                    The decision is recorded on ``solver.plan`` (see
@@ -172,10 +187,13 @@ import numpy as np
 from .analysis import MatrixAnalysis, analyze
 from .coarsen import (
     SEGMENT_COST,
+    BlockSchedule,
     CoarsenConfig,
     PlanDecision,
     RewriteCandidate,
     SweepCandidate,
+    blocked_candidate,
+    build_block_schedule,
     coarsen_schedule,
     plan_strategy,
     should_consider_rewrite,
@@ -184,12 +202,20 @@ from .codegen import (
     GATHER_UNROLL_MAX_K,
     Schedule,
     build_schedule,
+    make_blocked_solver,
     make_levelset_solver,
     make_rhs_transform,
     make_serial_solver,
 )
 from .csr import CSRMatrix
-from .levels import LevelSets, build_level_sets, build_reverse_level_sets
+from .levels import (
+    LevelSets,
+    SupernodeConfig,
+    Supernodes,
+    build_level_sets,
+    build_reverse_level_sets,
+    detect_supernodes,
+)
 from repro.kernels.backend import (
     KernelBackend,
     resolve_backend,
@@ -197,11 +223,14 @@ from repro.kernels.backend import (
 )
 from .packed import (
     PackedStats,
+    build_packed_blocked_layout,
     build_packed_layout,
     ell_packed_stats,
+    make_packed_blocked_solver,
     make_packed_levelset_solver,
     make_packed_rhs_transform,
     make_packed_serial_solver,
+    pack_blocked_values,
     pack_values,
 )
 from .rewrite import (
@@ -234,6 +263,7 @@ STRATEGIES = (
     "pallas_fused",
     "distributed",
     "sweep",
+    "blocked",
     "auto",
 )
 
@@ -256,6 +286,16 @@ def _as_coarsen_config(coarsen) -> Optional[CoarsenConfig]:
         return CoarsenConfig()
     assert isinstance(coarsen, CoarsenConfig), coarsen
     return coarsen
+
+
+def _as_supernode_config(supernodes) -> Optional[SupernodeConfig]:
+    """Normalize the ``supernodes`` build knob: None/True → default
+    detection config (``False`` additionally keeps the blocked executor out
+    of the auto planner's candidate set), a SupernodeConfig → itself."""
+    if supernodes is None or supernodes is True or supernodes is False:
+        return SupernodeConfig()
+    assert isinstance(supernodes, SupernodeConfig), supernodes
+    return supernodes
 
 
 def _as_sweep_config(sweep) -> Optional[SweepConfig]:
@@ -313,6 +353,8 @@ class SpTRSV:
     rewrite_result: Optional[RewriteResult]
     _solve_fn: Callable
     _rhs_fn: Optional[Callable]
+    block_schedule: Optional[BlockSchedule] = None  # strategy="blocked" only
+    supernodes: Optional[Supernodes] = None         # partition actually run
     transpose: bool = False
     plan: Optional[PlanDecision] = None   # set when strategy="auto" planned
     layout: str = "scatter"
@@ -335,6 +377,8 @@ class SpTRSV:
         bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
         coarsen=None,                    # True / CoarsenConfig: merge levels
         sweep=None,                      # True / SweepConfig: see below
+        supernodes=None,                 # SupernodeConfig / False: see below
+        block_kernel: str = "auto",      # blocked apply: auto / pallas / jnp
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -354,6 +398,18 @@ class SpTRSV:
         executor directly; with ``strategy="auto"`` it caps the sweep count
         the planner may certify (``sweep=False`` keeps sweeps out of the
         candidate set entirely).
+
+        ``supernodes`` configures supernode amalgamation for the blocked
+        (node-granular) executor — a
+        :class:`repro.core.levels.SupernodeConfig` tunes the relaxation /
+        block-size knobs, ``False`` keeps the blocked executor out of the
+        auto planner's candidate set.  With ``strategy="blocked"`` each
+        super-level runs as a batched dense diagonal-block apply (small
+        TRSM via precomputed inverses) plus a padded ELL panel update;
+        ``block_kernel`` picks the apply implementation (``"auto"`` —
+        pallas on compiled tpu/gpu, ``dot_general`` elsewhere; ``"pallas"``
+        / ``"jnp"`` force it).  A matrix with no amalgamatable rows
+        degrades to all-singleton blocks — the scalar-row schedule.
 
         ``coarsen`` merges adjacent levels into super-level slabs under the
         :mod:`repro.core.coarsen` cost model (fewer segments / sync points;
@@ -384,6 +440,7 @@ class SpTRSV:
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio,
             coarsen=coarsen, sweep=sweep,
+            supernodes=supernodes, block_kernel=block_kernel,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             backend=backend, interpret=interpret, jit=jit,
             layout=layout, gather_unroll_max_k=gather_unroll_max_k,
@@ -428,6 +485,8 @@ class SpTRSV:
         bucket_pad_ratio: float = 0.0,
         coarsen=None,
         sweep=None,
+        supernodes=None,
+        block_kernel: str = "auto",
         mesh=None,
         mesh_axis: str = "data",
         dist_strategy: str = "all_gather",
@@ -456,6 +515,7 @@ class SpTRSV:
             upper=upper, strategy=strategy_arg, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen, sweep=sweep,
+            supernodes=supernodes, block_kernel=block_kernel,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             backend=bk, jit=jit, layout=layout,
             gather_unroll_max_k=gather_unroll_max_k,
@@ -497,6 +557,23 @@ class SpTRSV:
                 _memo["coarse"] = coarsen_schedule(
                     _schedule(), cfg, unroll_threshold=unroll_threshold)
             return _memo["coarse"]
+
+        sncfg = _as_supernode_config(supernodes)
+
+        def _supernodes() -> Supernodes:
+            # detection + packing run on the (possibly rewritten) target, so
+            # blocked composes with an explicit rewrite directive like every
+            # other executor
+            if "sn" not in _memo:
+                _memo["sn"] = detect_supernodes(target, upper=upper,
+                                                config=sncfg)
+            return _memo["sn"]
+
+        def _block_schedule() -> BlockSchedule:
+            if "blocked" not in _memo:
+                _memo["blocked"] = build_block_schedule(
+                    target, _supernodes(), upper=upper)
+            return _memo["blocked"]
 
         plan: Optional[PlanDecision] = None
         if strategy == "auto":
@@ -549,11 +626,21 @@ class SpTRSV:
                         ell_k=max(int(row_off.max()) if row_off.size else 0,
                                   1),
                         n=target.n, contraction=q)
+            # Price the blocked (supernodal) executor when amalgamation
+            # finds substance: detection is a cheap O(nnz log nnz) probe,
+            # but packing dense blocks is only worth the build cost when
+            # rows actually merge.  ``supernodes=False`` opts out; an
+            # all-singleton partition (mean block size 1) never competes —
+            # it is the scalar schedule with extra reshapes.
+            blocked_cand = None
+            if supernodes is not False and _supernodes().mean_block_size >= 1.5:
+                blocked_cand = blocked_candidate(_block_schedule())
             plan = plan_strategy(
                 analysis, _schedule(),
                 _coarsened(plan_ccfg) if plan_ccfg is not None else None,
                 unroll_threshold=unroll_threshold, backend=bk,
-                rewritten=cands or None, sweep=sweep_cand)
+                rewritten=cands or None, sweep=sweep_cand,
+                blocked=blocked_cand)
             strategy = plan.strategy
             if strategy == "sweep":
                 scfg = dataclasses.replace(
@@ -593,6 +680,7 @@ class SpTRSV:
         repack: Optional[Callable] = None
         packed_stats: Optional[PackedStats] = None
         schedule: Optional[Schedule] = None
+        block_schedule: Optional[BlockSchedule] = None
         sweep_stats: Optional[SweepStats] = None
         sweep_exec: Optional[Callable] = None
         if strategy == "serial":
@@ -680,6 +768,26 @@ class SpTRSV:
                 dsched = shard_schedule(schedule, ndev)
                 fn = make_distributed_solver(
                     dsched, mesh, mesh_axis, strategy=dist_strategy)
+        elif strategy == "blocked":
+            # node-granular (supernodal) executor: batched dense diagonal-
+            # block apply + padded ELL panel update per super-level.  The
+            # dense block inverses live in the runtime value buffers, so the
+            # permuted layout refreshes value-only (re-gather + re-invert +
+            # swap) with a jit cache hit.
+            block_schedule = _block_schedule()
+            if permuted:
+                blay = build_packed_blocked_layout(block_schedule)
+                fn = make_packed_blocked_solver(
+                    blay, backend=bk, kernel=block_kernel,
+                    gather_unroll_max_k=gather_unroll_max_k)
+                values = pack_blocked_values(blay, target.data)
+                repack = lambda data, _bl=blay: pack_blocked_values(  # noqa: E731
+                    _bl, data)
+                packed_stats = blay.stats()
+            else:
+                fn = make_blocked_solver(
+                    block_schedule, backend=bk, kernel=block_kernel,
+                    gather_unroll_max_k=gather_unroll_max_k)
         elif strategy == "sweep":
             # sync-free speculative solve-then-correct (repro.core.sweep):
             # whole-matrix D + N split, k fused sweeps, no schedule at all.
@@ -757,6 +865,9 @@ class SpTRSV:
             strategy=strategy,
             analysis=analysis,
             schedule=schedule,
+            block_schedule=block_schedule,
+            supernodes=(block_schedule.supernodes
+                        if block_schedule is not None else None),
             rewrite_result=rres,
             _solve_fn=solve_fn,
             _rhs_fn=rhs_c,
@@ -902,7 +1013,18 @@ class SpTRSV:
             "n": self.n,
             "nnz": self.analysis.nnz,
             "segments": (self.schedule.num_segments
-                         if self.schedule is not None else 1),
+                         if self.schedule is not None
+                         else self.block_schedule.num_segments
+                         if self.block_schedule is not None else 1),
+            "supernode_count": (self.supernodes.num_supernodes
+                                if self.supernodes is not None
+                                else self.analysis.supernode_count),
+            "mean_block_size": (self.supernodes.mean_block_size
+                                if self.supernodes is not None
+                                else self.analysis.mean_block_size),
+            "dense_block_fraction": (self.supernodes.dense_block_fraction
+                                     if self.supernodes is not None
+                                     else self.analysis.dense_block_fraction),
             "permutation_applied": bool(ps and ps.permutation_applied),
             "packed_value_bytes": ps.value_bytes if ps else None,
             "packed_index_bytes": ps.index_bytes if ps else None,

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,7 +23,7 @@ from repro.kernels.backend import resolve_backend
 
 from . import lowering_gpu, lowering_tpu
 
-__all__ = ["make_block_solver", "select_lowering"]
+__all__ = ["make_block_apply", "make_block_solver", "select_lowering"]
 
 
 def select_lowering(backend=None):
@@ -30,6 +31,64 @@ def select_lowering(backend=None):
     backend-matrix CI job asserts on."""
     bk = resolve_backend(backend)
     return lowering_gpu if bk.platform == "gpu" else lowering_tpu
+
+
+def _dot_apply(dinv: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Reference batched block apply: (B, T, T) @ (B, T[, m]) via
+    ``dot_general``, accumulating in the RHS dtype (float64-exact under
+    x64 — the interpret/CPU path the differential fuzz relies on)."""
+    r = rhs[..., None] if rhs.ndim == 2 else rhs
+    out = jax.lax.dot_general(
+        dinv.astype(rhs.dtype), r,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=rhs.dtype,
+    )
+    return out[..., 0] if rhs.ndim == 2 else out
+
+
+def make_block_apply(backend=None, *, kernel: str = "auto",
+                     batch_block: int = 8) -> Callable:
+    """Batched diagonal-block apply ``(B, T, T) × (B, T[, m]) -> (B, T[, m])``
+    for the blocked (supernodal) executors.
+
+    ``kernel`` picks the implementation:
+
+    * ``"auto"``   — the pallas lowering on compiled tpu/gpu backends, the
+      ``dot_general`` path under the interpreter / on CPU (the pallas
+      interpreter is a correctness harness, far too slow for a hot loop);
+    * ``"pallas"`` — force the backend's pallas lowering (interpret-mode
+      backends run it under the interpreter — the CI path that exercises
+      both lowering families);
+    * ``"jnp"``    — force the ``dot_general`` path.
+
+    The pallas kernels are single-vector ``(NB, T)``; batched RHS always
+    takes the ``dot_general`` path.  ``NB`` is padded up to a
+    ``batch_block`` multiple with identity blocks / zero rows to satisfy the
+    kernel's grid, and the pad is sliced off the result.  The kernels
+    accumulate in float32 — fine for f32 solves; float64 pipelines should
+    keep ``kernel="auto"``/``"jnp"`` off-hardware."""
+    assert kernel in ("auto", "pallas", "jnp"), kernel
+    bk = resolve_backend(backend)
+    use_pallas = kernel == "pallas" or (kernel == "auto" and not bk.interpret)
+    low = select_lowering(bk)
+
+    def apply(dinv: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+        if not use_pallas or rhs.ndim != 2:
+            return _dot_apply(dinv, rhs)
+        B, T = rhs.shape
+        bb = min(batch_block, B) if B else 1
+        B_pad = -(-B // bb) * bb
+        if B_pad != B:
+            pad = B_pad - B
+            dinv = jnp.concatenate(
+                [dinv, jnp.broadcast_to(jnp.eye(T, dtype=dinv.dtype),
+                                        (pad, T, T))])
+            rhs = jnp.concatenate([rhs, jnp.zeros((pad, T), rhs.dtype)])
+        out = low.block_apply(dinv.astype(rhs.dtype), rhs,
+                              batch_block=bb, interpret=bk.interpret)
+        return out[:B]
+
+    return apply
 
 
 def make_block_solver(

@@ -18,6 +18,10 @@ the regular suite's matrices do not reach:
 ``near_singular``   diagonal magnitudes log-uniform over ~9 decades with a
                     few entries at the pivot-tolerance floor — conditioning
                     and pivot-skip stress
+``jagged_rows``     alternating diagonal-only / far-deps-only rows — no two
+                    adjacent rows share structure under any relaxation
+                    below 1.0, so supernode amalgamation finds nothing (the
+                    blocked executor's all-singleton degenerate case)
 
 All are lower-triangular with nonzero diagonals (solvable); ``near_singular``
 is ill-conditioned by design, so comparisons against an oracle must scale
@@ -118,6 +122,23 @@ def _near_singular(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
     return _finalize(rows, cols, vals, n, dtype)
 
 
+def _jagged_rows(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    """No-amalgamatable-rows pattern: odd rows are diagonal-only, even rows
+    carry several dependencies that deliberately exclude row ``i-1``.  Every
+    adjacent pair then mismatches by at least max(|A|, |B|) + 1 (a diag-only
+    predecessor never appears in its successor's columns and vice versa), so
+    the supernode similarity criterion fails for ANY relaxation below 1.0 —
+    detection must degrade to all-singleton blocks and the blocked executor
+    to the scalar-row case."""
+    rows, cols, vals = list(range(n)), list(range(n)), list(4.0 + rng.random(n))
+    for i in range(2, n, 2):
+        for j in rng.choice(i - 1, size=min(i - 1, 3), replace=False):
+            rows.append(i)
+            cols.append(int(j))
+            vals.append(rng.normal() * 0.3)
+    return _finalize(rows, cols, vals, n, dtype)
+
+
 PATHOLOGICAL_PATTERNS = {
     "arrow": _arrow,
     "dense_last_row": _dense_last_row,
@@ -125,6 +146,7 @@ PATHOLOGICAL_PATTERNS = {
     "singleton_ladder": _singleton_ladder,
     "power_law": _power_law,
     "near_singular": _near_singular,
+    "jagged_rows": _jagged_rows,
 }
 
 

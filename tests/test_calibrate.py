@@ -1,0 +1,104 @@
+"""Calibration-table persistence: JSON save/load roundtrip, overlay
+precedence over the shipped defaults, unknown-backend fallback, and the
+malformed-file error paths ``benchmarks/calibrate.py`` relies on."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.calibrate import (
+    DEFAULT_CALIBRATIONS,
+    BackendCalibration,
+    get_calibration,
+    load_calibrations,
+    refresh,
+    save_calibrations,
+)
+
+
+def test_save_load_roundtrip(tmp_path):
+    path = tmp_path / "cal.json"
+    table = {
+        "cpu": BackendCalibration(backend="cpu", launch_cost=1234.0,
+                                  gemm_cost=0.5, trsm_cost=10.0,
+                                  source="measured"),
+        "tpu": DEFAULT_CALIBRATIONS["tpu"],
+    }
+    save_calibrations(path, table)
+    loaded = load_calibrations(path)
+    assert loaded == table
+    # every field survives, not just the ones we set explicitly
+    for key in table:
+        assert dataclasses.asdict(loaded[key]) == dataclasses.asdict(table[key])
+
+
+def test_overlay_precedence(tmp_path):
+    """``refresh`` merges a measured table over the defaults: measured rows
+    win, rows the file does not carry fall through to the defaults."""
+    path = tmp_path / "cal.json"
+    measured = BackendCalibration(backend="cpu", gather_cost=0.125,
+                                  source="measured")
+    save_calibrations(path, {"cpu": measured})
+    table = refresh(path)
+    assert table["cpu"] == measured
+    assert table["cpu"].source == "measured"
+    # untouched rows are the shipped defaults
+    assert table["tpu"] == DEFAULT_CALIBRATIONS["tpu"]
+    assert table["gpu"] == DEFAULT_CALIBRATIONS["gpu"]
+    # get_calibration honours the same precedence
+    assert get_calibration("cpu", table).gather_cost == 0.125
+    assert get_calibration("gpu", table) == DEFAULT_CALIBRATIONS["gpu"]
+
+
+def test_refresh_missing_file_is_defaults(tmp_path):
+    table = refresh(tmp_path / "does_not_exist.json")
+    assert table == DEFAULT_CALIBRATIONS
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="no calibration for backend"):
+        get_calibration("quantum")
+    # a table override does not mask the fallback error for absent keys
+    with pytest.raises(ValueError, match="quantum"):
+        get_calibration("quantum", {"cpu": DEFAULT_CALIBRATIONS["cpu"]})
+
+
+def test_forward_compat_ignores_unknown_row_keys(tmp_path):
+    """Old planners must load tables written by newer code: unknown keys in
+    a row are dropped, missing fields take dataclass defaults."""
+    path = tmp_path / "cal.json"
+    path.write_text(json.dumps({
+        "cpu": {"launch_cost": 999.0, "a_future_field": 42},
+    }))
+    table = load_calibrations(path)
+    assert table["cpu"].launch_cost == 999.0
+    assert table["cpu"].backend == "cpu"          # defaulted from the key
+    assert table["cpu"].gemm_cost == BackendCalibration("cpu").gemm_cost
+
+
+def test_malformed_file_raises_valueerror(tmp_path):
+    bad_json = tmp_path / "bad.json"
+    bad_json.write_text("{not json")
+    with pytest.raises(ValueError, match=str(bad_json)):
+        load_calibrations(bad_json)
+
+    not_object = tmp_path / "list.json"
+    not_object.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(ValueError, match="expected a JSON object"):
+        load_calibrations(not_object)
+
+    bad_row = tmp_path / "row.json"
+    bad_row.write_text(json.dumps({"cpu": "fast"}))
+    with pytest.raises(ValueError, match="row 'cpu'"):
+        load_calibrations(bad_row)
+
+
+def test_blocked_pricing_fields_in_every_default_row():
+    """The blocked executor's gemm/trsm coefficients exist on every shipped
+    row, and accelerator rows price dense block flops below gathered flops."""
+    for key, row in DEFAULT_CALIBRATIONS.items():
+        assert row.gemm_cost > 0, key
+        assert row.trsm_cost > 0, key
+        assert row.gemm_cost < row.gather_cost, key
+    assert DEFAULT_CALIBRATIONS["tpu"].gemm_cost < \
+        DEFAULT_CALIBRATIONS["cpu"].gemm_cost

@@ -37,7 +37,7 @@ from repro.core import RewriteConfig, SpTRSV
 from repro.sparse import PATHOLOGICAL_PATTERNS, pathological
 
 STRATEGIES = ["serial", "levelset", "levelset_unroll",
-              "pallas_level", "pallas_fused", "sweep"]
+              "pallas_level", "pallas_fused", "sweep", "blocked"]
 POLICIES = {
     "none": None,
     "thin": RewriteConfig(thin_threshold=2),
@@ -162,6 +162,28 @@ def test_differential_gpu_backend_slice(pattern):
     with enable_x64():
         for combo in _gpu_combos_for(pattern, exhaustive=False):
             _run_combo(L, pattern, 1, combo, backend="interpret:gpu")
+
+
+# --------------------------------------------------------------------------
+# blocked executor: the full blocked × transpose × batch × layout sub-grid
+# runs in tier-1 (the rotating slice above only samples it) — supernodal
+# schedules have enough moving parts (panel gathers, padded dense blocks,
+# block-level DAG) that every pattern gets the complete 8-combo slice,
+# including ``jagged_rows`` where amalgamation finds nothing and the
+# executor must degrade to all-1×1 blocks.
+# --------------------------------------------------------------------------
+BLOCKED_GRID = list(itertools.product(["blocked"], ["none"], LAYOUTS,
+                                      [False, True], [0, 3]))
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_differential_blocked_slice(pattern):
+    """Tier-1: blocked strategy over the full layout × transpose × batch
+    sub-grid, one seed per pattern."""
+    L = pathological(pattern, n=72, seed=1)
+    with enable_x64():
+        for combo in BLOCKED_GRID:
+            _run_combo(L, pattern, 1, combo)
 
 
 # --------------------------------------------------------------------------
