@@ -81,6 +81,13 @@ class BackendCalibration:
     ``trsm_cost``              fixed per-diagonal-block overhead of the
                                blocked apply (reshape + batched dispatch
                                bookkeeping), in FLOP-equivalents
+    ``mixed_gather_discount``  multiplier on ``gather_cost`` when the guard's
+                               ``precision="mixed"`` mode stores values in
+                               bf16 — half the value-stream bytes, so
+                               gather-bound terms cheapen by however much of
+                               the stream is values rather than indices on
+                               this backend (host caches benefit less than
+                               bandwidth-bound accelerators)
     ``source``                 ``"default"`` (shipped) or ``"measured"``
                                (``benchmarks/calibrate.py`` micro-run)
     """
@@ -96,6 +103,7 @@ class BackendCalibration:
     fused_num_launches: str = "per_level"
     gemm_cost: float = 0.25
     trsm_cost: float = 64.0
+    mixed_gather_discount: float = 0.75
     source: str = "default"
 
     def __post_init__(self):
@@ -119,6 +127,7 @@ DEFAULT_CALIBRATIONS: Dict[str, BackendCalibration] = {
         fused_num_launches="one",
         gemm_cost=0.05,   # MXU: dense block flops are nearly free
         trsm_cost=32.0,
+        mixed_gather_discount=0.55,  # HBM-bound gathers: bytes ≈ time
     ),
     # Kernel launches ARE the barriers (pricier than a TPU grid step); the
     # fused layout runs one launch per wavefront span; x in GMEM, so the
@@ -133,6 +142,7 @@ DEFAULT_CALIBRATIONS: Dict[str, BackendCalibration] = {
         fused_num_launches="per_level",
         gemm_cost=0.1,    # tensor cores; still pays GMEM block loads
         trsm_cost=48.0,
+        mixed_gather_discount=0.55,  # GMEM-bound gathers: bytes ≈ time
     ),
 }
 

@@ -598,6 +598,7 @@ def plan_strategy(
     rewritten: Optional[Dict[str, RewriteCandidate]] = None,
     sweep: Optional[SweepCandidate] = None,
     blocked: Optional[BlockedCandidate] = None,
+    precision: str = "native",
 ) -> PlanDecision:
     """Pick an execution strategy *and matrix transformation* from the
     analysis + schedule cost model.
@@ -626,9 +627,23 @@ def plan_strategy(
     (``fused_max_rows > 0``, i.e. never on cpu) and the target is not the
     interpreter — interpret mode is a correctness harness, never a
     performance win; the cost below models the compiled kernel.
+
+    ``precision="mixed"`` prices the guard's bf16-storage mode: every
+    gather-bound term is scaled by the backend's ``mixed_gather_discount``
+    (value-stream bytes halve; launch and dispatch terms do not), so the
+    planner can shift toward gather-bound candidates when the caller
+    requested mixed-precision execution.
     """
     backend, cal_key, interpret = _plan_target(backend, interpret)
     cal = calibration if calibration is not None         else get_calibration(cal_key)
+    if precision == "mixed":
+        # bf16 value storage (guard precision="mixed") halves the value-
+        # stream bytes of every gather-bound term; the calibrated discount
+        # reflects how much of the gather stream is values vs indices on
+        # this backend.  Launch/TRSM/serial-step terms are unaffected —
+        # mixed precision cheapens bandwidth, not dispatches.
+        cal = dataclasses.replace(
+            cal, gather_cost=cal.gather_cost * cal.mixed_gather_discount)
     seg_cost = cal.launch_cost if segment_cost is None else segment_cost
 
     costs: Dict[str, float] = {}
@@ -713,7 +728,10 @@ def plan_strategy(
             f"min modelled cost {costs[best]:.0f} among "
             + ", ".join(f"{k}={v:.0f}" for k, v in sorted(costs.items()))
             + f" (n={analysis.n}, levels={analysis.num_levels}, "
-            f"thin_fraction={analysis.thin_fraction_2:.2f}, backend={backend})"
+            f"thin_fraction={analysis.thin_fraction_2:.2f}, backend={backend}"
+            + (f", precision=mixed(gather x{cal.mixed_gather_discount:g})"
+               if precision == "mixed" else "")
+            + ")"
         ),
         costs=costs,
     )

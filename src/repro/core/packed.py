@@ -70,6 +70,9 @@ __all__ = [
     "gather_src",
     "pack_values",
     "pack_blocked_values",
+    "cast_value_buffers",
+    "MIXED_VALS_DTYPE",
+    "MIXED_DIAG_DTYPE",
     "make_packed_levelset_solver",
     "make_packed_blocked_solver",
     "make_packed_serial_solver",
@@ -294,6 +297,30 @@ def pack_values(layout: PackedLayout, data: np.ndarray):
             gather_src(data, layout.diag_src, 1.0, layout.diag_flat.dtype))
 
 
+# Mixed-precision storage dtypes (guard ``precision="mixed"``): bf16 for the
+# large off-diagonal/panel stream, fp32 for the diagonal / inverted-diagonal
+# buffer.  The diagonal stays fp32 because the refinement error-iteration
+# matrix (A − Ã)Ã⁻¹ has the relative diagonal storage error on ITS diagonal
+# — bf16 diagonals stall refinement near 4e-3/step while fp32 diagonals
+# contract ~1e-3–1e-4/step; the diagonal is O(n) of O(nnz) bytes, so the
+# saving lives in the off-diagonal stream either way.
+MIXED_VALS_DTYPE = jnp.bfloat16
+MIXED_DIAG_DTYPE = jnp.float32
+
+
+def cast_value_buffers(values, *, vals_dtype=MIXED_VALS_DTYPE,
+                       diag_dtype=MIXED_DIAG_DTYPE):
+    """Lower a packed runtime value tuple to mixed-precision storage: the
+    first buffer (off-diagonal / panel values — the O(nnz) stream) to
+    ``vals_dtype``, every remaining buffer (diagonal, inverted diagonal
+    blocks) to ``diag_dtype``.  Works for every permuted-layout executor —
+    they all pass ``(offdiag_buffer, diag_buffer)`` 2-tuples and cast to the
+    RHS dtype at solve time."""
+    vals, *rest = values
+    return (jnp.asarray(vals).astype(vals_dtype),
+            *(jnp.asarray(r).astype(diag_dtype) for r in rest))
+
+
 # --------------------------------------------------------------------------
 # Permuted-space executors (pure JAX)
 # --------------------------------------------------------------------------
@@ -513,8 +540,21 @@ def pack_blocked_values(layout: PackedBlockedLayout, data: np.ndarray):
         size = seg.B * seg.T * seg.T
         blk = dense[seg.dinv_off : seg.dinv_off + size].reshape(
             seg.B, seg.T, seg.T)
-        dinv[seg.dinv_off : seg.dinv_off + size] = \
-            np.linalg.inv(blk).ravel()
+        try:
+            inv = np.linalg.inv(blk)
+        except np.linalg.LinAlgError:
+            # A singular/non-finite diagonal block (zero pivot admitted via
+            # refresh(validate=False)) must not abort the re-pack: invert
+            # the healthy blocks, poison the broken ones with NaN so the
+            # solve produces NaN rows a guarded solver's breakdown policy
+            # can see and handle.
+            inv = np.empty_like(blk)
+            for i in range(blk.shape[0]):
+                try:
+                    inv[i] = np.linalg.inv(blk[i])
+                except np.linalg.LinAlgError:
+                    inv[i] = np.nan
+        dinv[seg.dinv_off : seg.dinv_off + size] = inv.ravel()
     return jnp.asarray(vals), jnp.asarray(dinv)
 
 

@@ -62,6 +62,7 @@ def make_ic_preconditioner(
     sweeps: Optional[int] = None,
     sweep_tol: Optional[float] = None,
     backend=None,
+    guard=None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Given lower factor L (A ≈ L Lᵀ) build z = (L Lᵀ)^{-1} r.
 
@@ -84,17 +85,29 @@ def make_ic_preconditioner(
     accepted for config symmetry but only matters if verification is
     re-enabled.  ``rewrite`` is ignored in sweep mode — the sweeps consume
     the factor directly and an RHS transform would add a dispatch to the
-    apply for nothing."""
+    apply for nothing.
+
+    ``guard`` (``True`` or a :class:`repro.core.guard.GuardConfig`) wraps
+    both sweeps in the guarded execution layer.  The **tolerance-aware
+    inexact** mode is ``GuardConfig(residual_tol=τ, on_breakdown="refine")``
+    with a loose ``τ``: each apply is verified and refined only *up to* the
+    requested tolerance — cheaper than an exact solve, but never the silent
+    garbage an unverified inexact apply can produce (zero extra inner solves
+    when the tolerance already holds).  Because the refinement count may
+    vary call-to-call, a guarded ``M⁻¹`` with loose ``τ`` is no longer a
+    strictly fixed linear operator — pair it with ``pcg(...,
+    stall_window=...)`` just like the sweep mode."""
     if sweeps is not None:
         from .sweep import SweepConfig
 
         fwd, bwd = SpTRSV.build_pair(
             L, strategy="sweep", rewrite=None, backend=backend,
             sweep=SweepConfig(k=sweeps, residual_tol=sweep_tol,
-                              fallback=None))
+                              fallback=None),
+            guard=guard)
     else:
         fwd, bwd = SpTRSV.build_pair(L, strategy=strategy, rewrite=rewrite,
-                                     backend=backend)
+                                     backend=backend, guard=guard)
 
     def apply(r: jnp.ndarray) -> jnp.ndarray:
         return bwd.solve(fwd.solve(r))
@@ -110,6 +123,7 @@ def make_ic_preconditioner_batched(
     sweeps: Optional[int] = None,
     sweep_tol: Optional[float] = None,
     backend=None,
+    guard=None,
 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Batched z = (L Lᵀ)^{-1} R for R: (n, m).
 
@@ -120,7 +134,7 @@ def make_ic_preconditioner_batched(
     single-RHS path ever specializes."""
     return make_ic_preconditioner(L, strategy=strategy, rewrite=rewrite,
                                   sweeps=sweeps, sweep_tol=sweep_tol,
-                                  backend=backend)
+                                  backend=backend, guard=guard)
 
 
 def pcg(A: CSRMatrix, b: jnp.ndarray,

@@ -221,10 +221,12 @@ from repro.kernels.backend import (
     resolve_backend,
     warn_interpret_deprecated,
 )
+from .guard import GuardConfig, SolveGuard, scan_values
 from .packed import (
     PackedStats,
     build_packed_blocked_layout,
     build_packed_layout,
+    cast_value_buffers,
     ell_packed_stats,
     make_packed_blocked_solver,
     make_packed_levelset_solver,
@@ -298,6 +300,17 @@ def _as_supernode_config(supernodes) -> Optional[SupernodeConfig]:
     return supernodes
 
 
+def _as_guard_config(guard) -> Optional[GuardConfig]:
+    """Normalize the ``guard`` build knob: None/False → unguarded, True →
+    default :class:`repro.core.guard.GuardConfig`, a GuardConfig → itself."""
+    if guard is None or guard is False:
+        return None
+    if guard is True:
+        return GuardConfig()
+    assert isinstance(guard, GuardConfig), guard
+    return guard
+
+
 def _as_sweep_config(sweep) -> Optional[SweepConfig]:
     """Normalize the ``sweep`` build knob: None/False → default off
     (``strategy="sweep"`` still gets a default config; ``False`` additionally
@@ -361,6 +374,7 @@ class SpTRSV:
     backend: str = "interpret"            # resolved kernel backend name
     packed_stats: Optional[PackedStats] = None
     sweep_stats: Optional[SweepStats] = None   # live, strategy="sweep" only
+    guard: Optional[SolveGuard] = None    # guarded execution layer (guard=)
     _values: Optional[tuple] = None       # runtime value buffers (permuted)
     _e_values: Optional[jnp.ndarray] = None
     _refresh_ctx: Optional[_RefreshCtx] = None
@@ -377,6 +391,7 @@ class SpTRSV:
         bucket_pad_ratio: float = 0.0,   # >1: split levels into nnz buckets
         coarsen=None,                    # True / CoarsenConfig: merge levels
         sweep=None,                      # True / SweepConfig: see below
+        guard=None,                      # True / GuardConfig: see below
         supernodes=None,                 # SupernodeConfig / False: see below
         block_kernel: str = "auto",      # blocked apply: auto / pallas / jnp
         mesh=None,
@@ -398,6 +413,26 @@ class SpTRSV:
         executor directly; with ``strategy="auto"`` it caps the sweep count
         the planner may certify (``sweep=False`` keeps sweeps out of the
         candidate set entirely).
+
+        ``guard`` wraps the built solver in the guarded execution layer
+        (``True`` or a :class:`repro.core.guard.GuardConfig`): every solve
+        is verified with one fused componentwise residual pass against the
+        ORIGINAL system, refined up to ``refine_steps`` times
+        (``x += solve(r)``), and columns still above ``residual_tol``
+        (default ``128·eps`` of the RHS dtype) are handled by
+        ``on_breakdown`` — ``"refine"`` returns the best iterate and records
+        the breakdown in ``stats()``, ``"fallback"`` re-solves the failed
+        RHS columns with a lazily built exact solver (pivot-repaired when
+        the build/refresh value scan tripped) and splices them in like the
+        sweep executor's correction, ``"raise"`` raises
+        :class:`repro.core.guard.GuardBreakdownError`.
+        ``GuardConfig(precision="mixed")`` additionally stores the packed
+        off-diagonal value buffer in bf16 (half the value-stream bytes) with
+        the diagonal buffer in fp32, accumulates inner solves in fp32, and
+        relies on refinement to recover fp64-class accuracy — requires
+        ``layout="permuted"``.  Guard accounting (refinement steps taken,
+        fallbacks fired, residual achieved, pivot alarms) lands in
+        ``stats()`` under the ``guard_*`` keys.
 
         ``supernodes`` configures supernode amalgamation for the blocked
         (node-granular) executor — a
@@ -439,7 +474,7 @@ class SpTRSV:
             strategy=strategy, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio,
-            coarsen=coarsen, sweep=sweep,
+            coarsen=coarsen, sweep=sweep, guard=guard,
             supernodes=supernodes, block_kernel=block_kernel,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             backend=backend, interpret=interpret, jit=jit,
@@ -485,6 +520,7 @@ class SpTRSV:
         bucket_pad_ratio: float = 0.0,
         coarsen=None,
         sweep=None,
+        guard=None,
         supernodes=None,
         block_kernel: str = "auto",
         mesh=None,
@@ -515,7 +551,7 @@ class SpTRSV:
             upper=upper, strategy=strategy_arg, rewrite=rewrite,
             unroll_threshold=unroll_threshold,
             bucket_pad_ratio=bucket_pad_ratio, coarsen=coarsen, sweep=sweep,
-            supernodes=supernodes, block_kernel=block_kernel,
+            guard=guard, supernodes=supernodes, block_kernel=block_kernel,
             mesh=mesh, mesh_axis=mesh_axis, dist_strategy=dist_strategy,
             backend=bk, jit=jit, layout=layout,
             gather_unroll_max_k=gather_unroll_max_k,
@@ -525,6 +561,13 @@ class SpTRSV:
         analysis = analyze(system, levels, upper=upper)
         ccfg = _as_coarsen_config(coarsen)
         scfg = _as_sweep_config(sweep)
+        gcfg = _as_guard_config(guard)
+        if gcfg is not None and gcfg.precision == "mixed" \
+                and layout != "permuted":
+            raise ValueError(
+                "guard precision='mixed' requires layout='permuted' — "
+                "mixed storage lowers the runtime value buffers, and the "
+                "scatter layout embeds values as trace-time constants")
         if strategy == "sweep" and scfg is None:
             scfg = SweepConfig()
 
@@ -640,7 +683,8 @@ class SpTRSV:
                 _coarsened(plan_ccfg) if plan_ccfg is not None else None,
                 unroll_threshold=unroll_threshold, backend=bk,
                 rewritten=cands or None, sweep=sweep_cand,
-                blocked=blocked_cand)
+                blocked=blocked_cand,
+                precision=gcfg.precision if gcfg is not None else "native")
             strategy = plan.strategy
             if strategy == "sweep":
                 scfg = dataclasses.replace(
@@ -832,6 +876,20 @@ class SpTRSV:
         else:  # pragma: no cover
             raise ValueError(strategy)
 
+        if gcfg is not None and gcfg.precision == "mixed":
+            if values is None:
+                raise ValueError(
+                    f"guard precision='mixed' is not supported for "
+                    f"strategy={strategy!r} (no runtime value buffers)")
+            # bf16 off-diagonal stream + fp32 diagonal buffer; executors
+            # cast to the RHS dtype at solve time, and the guard runs inner
+            # solves in fp32 with fp64 refinement recovering full accuracy
+            values = cast_value_buffers(values)
+            if repack is not None:
+                _repack_full = repack
+                repack = lambda data: cast_value_buffers(  # noqa: E731
+                    _repack_full(data))
+
         # jit the RHS transform b' = E b separately from the solve.  A
         # single jit over both lets XLA fuse the batched SpMV into the
         # per-level consumers and recompute it, a >10x slowdown at m=64 on
@@ -860,7 +918,7 @@ class SpTRSV:
             rewrite=rres, repack=repack, e_repack=e_repack,
             rebuild=_rebuild,
         )
-        return SpTRSV(
+        solver = SpTRSV(
             n=system.n,
             strategy=strategy,
             analysis=analysis,
@@ -882,6 +940,30 @@ class SpTRSV:
             _refresh_ctx=ctx,
             _sweep_exec=sweep_exec,
         )
+        if gcfg is not None:
+            # The guard verifies against the ORIGINAL (pre-rewrite) system —
+            # end-to-end coverage of rewrite replay and E-SpMV fill — and its
+            # exact fallback is built on that same system, so eliminated-
+            # pivot divisions cannot poison the corrective path.  The inner
+            # solve is the live pipeline (`_solve_raw` reads the current
+            # value buffers), so refresh keeps the guard coherent.
+            def _guard_fallback(data, _sys=system, _lv=levels):
+                fb = SpTRSV._build_system(
+                    CSRMatrix(_sys.indptr, _sys.indices,
+                              np.asarray(data).astype(_sys.dtype, copy=False),
+                              _sys.shape),
+                    _lv, upper=upper, strategy=gcfg.fallback, rewrite=None,
+                    unroll_threshold=unroll_threshold,
+                    bucket_pad_ratio=bucket_pad_ratio,
+                    backend=bk, jit=jit, layout=layout,
+                    gather_unroll_max_k=gather_unroll_max_k)
+                return fb.solve
+
+            solver.guard = SolveGuard(
+                system, upper=upper, config=gcfg,
+                inner_solve=solver._solve_raw,
+                fallback_builder=_guard_fallback, jit=jit)
+        return solver
 
     @property
     def dtype(self) -> np.dtype:
@@ -901,10 +983,24 @@ class SpTRSV:
 
         Permuted-layout solvers permute ``b`` and un-permute ``x`` exactly
         once inside the executor (two O(n) gathers at the API boundary —
-        the price of contiguous per-segment reads/writes)."""
+        the price of contiguous per-segment reads/writes).
+
+        Guarded solvers (``guard=``) route through
+        :meth:`repro.core.guard.SolveGuard.solve`: the result is verified
+        against the original system's componentwise residual, iteratively
+        refined, and columns that stay above tolerance are handled by the
+        configured ``on_breakdown`` policy (best-effort / exact per-column
+        fallback / :class:`repro.core.guard.GuardBreakdownError`)."""
         if b.ndim not in (1, 2) or b.shape[0] != self.n:
             raise ValueError(
                 f"b must be ({self.n},) or ({self.n}, m); got {b.shape}")
+        if self.guard is not None:
+            return self.guard.solve(b)
+        return self._solve_raw(b)
+
+    def _solve_raw(self, b: jnp.ndarray) -> jnp.ndarray:
+        """The unguarded solve pipeline (RHS transform + executor) against
+        the LIVE value buffers — what the guard wraps and refines."""
         if self._rhs_fn is not None:
             b = (self._rhs_fn(b, self._e_values)
                  if self._e_values is not None else self._rhs_fn(b))
@@ -922,7 +1018,7 @@ class SpTRSV:
             raise ValueError(f"solve_batched expects (n, m); got {B.shape}")
         return self.solve(B)
 
-    def refresh(self, new_values) -> "SpTRSV":
+    def refresh(self, new_values, *, validate: bool = True) -> "SpTRSV":
         """Value-only numeric refresh: swap in new matrix **values** of the
         same sparsity pattern, reusing the whole cached symbolic state —
         level analysis, permutation, packed-buffer offsets, coarsening, the
@@ -942,7 +1038,17 @@ class SpTRSV:
         Scatter-layout solvers (values embedded as trace-time constants)
         fall back to a cold rebuild, as does the rare case of a rewrite
         plan that does not numerically transfer (zero pivot / exact-zero
-        cancellation in the *original* values).  Returns ``self``."""
+        cancellation in the *original* values).  Returns ``self``.
+
+        ``validate`` (default on) runs a cheap O(nnz) value health scan —
+        finiteness of every entry plus an exact-zero diagonal check — and
+        raises ``ValueError`` on failure, because a refreshed executor would
+        otherwise silently divide by zero or propagate NaN through the whole
+        schedule.  ``validate=False`` skips the scan (e.g. to let a guarded
+        solver's breakdown policy handle the bad values at solve time
+        instead); a guarded solver additionally re-runs its own
+        ``pivot_tol``-aware scan and re-packs its residual checker after
+        every refresh."""
         ctx = self._refresh_ctx
         if ctx is None:
             raise ValueError("solver was built without refresh state")
@@ -961,6 +1067,19 @@ class SpTRSV:
             raise ValueError(
                 f"new values must have shape {ctx.source.data.shape} "
                 f"(one per stored nonzero); got {data.shape}")
+        if validate:
+            # O(nnz) health scan of the incoming values.  The source factor
+            # is lower-triangular CSR with sorted columns, so its diagonal
+            # is the last stored entry of every row.
+            diag_idx = ctx.source.indptr[1:] - 1
+            nonfinite, zero_piv = scan_values(data, diag_idx)
+            if nonfinite or zero_piv:
+                raise ValueError(
+                    f"refresh: new values contain {nonfinite} non-finite "
+                    f"entry(ies) and {zero_piv} zero/non-finite diagonal "
+                    f"pivot(s); pass validate=False to accept them anyway "
+                    f"(a guarded solver then applies its breakdown policy "
+                    f"at solve time)")
 
         def _cold(reason: str) -> "SpTRSV":
             logger.warning("SpTRSV.refresh: %s — falling back to a cold "
@@ -998,6 +1117,10 @@ class SpTRSV:
         self._refresh_ctx = dataclasses.replace(
             ctx, source=CSRMatrix(ctx.source.indptr, ctx.source.indices,
                                   data, ctx.source.shape))
+        if self.guard is not None:
+            # re-pack the guard's full-precision residual buffers and re-run
+            # its pivot_tol-aware value scan (breakdown policy applies)
+            self.guard.refresh(sys_data)
         return self
 
     def stats(self) -> dict:
@@ -1044,4 +1167,19 @@ class SpTRSV:
             "sweep": (self.sweep_stats.report()
                       if self.sweep_stats is not None else None),
             "planned_sweeps": self.plan.sweep_k if self.plan else None,
+            # guarded-execution accounting (guard=GuardConfig(...)): the
+            # full report plus the headline observables — refinement steps
+            # taken, fallbacks fired, residual achieved, pivot alarms
+            "guard": (self.guard.stats.report()
+                      if self.guard is not None else None),
+            "guard_precision": (self.guard.stats.precision
+                                if self.guard is not None else None),
+            "guard_refine_steps": (self.guard.stats.refine_steps_total
+                                   if self.guard is not None else None),
+            "guard_fallbacks": (self.guard.stats.fallback_solves
+                                if self.guard is not None else None),
+            "guard_residual": (self.guard.stats.last_residual_ratio
+                               if self.guard is not None else None),
+            "guard_pivot_alarms": (self.guard.stats.pivot_alarms
+                                   if self.guard is not None else None),
         }

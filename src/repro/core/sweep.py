@@ -59,7 +59,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codegen import EllMatrix, _coef, build_offdiag_ell
+from .codegen import (GATHER_UNROLL_MAX_K, EllMatrix, _coef,
+                      build_offdiag_ell)
 from .csr import CSRMatrix
 from .packed import gather_src
 
@@ -73,6 +74,7 @@ __all__ = [
     "contraction_factor",
     "planned_sweeps",
     "default_residual_tol",
+    "residual_terms",
     "make_sweep_executor",
     "make_sweep_solver",
 ]
@@ -224,6 +226,51 @@ def planned_sweeps(contraction: float, depth: int, tol: float,
     return k if 1 <= k <= cap else None
 
 
+def residual_terms(b: jnp.ndarray, x: jnp.ndarray, vals: jnp.ndarray,
+                   diag: jnp.ndarray, cols: jnp.ndarray):
+    """Componentwise backward-error terms of a candidate solution ``x`` of
+    ``(D + N) x = b`` against the ``D + N`` ELL split (``vals``/``cols`` the
+    strictly-triangular part transposed ``(K, n)``, ``diag`` the diagonal).
+
+    Returns ``(r, ratio)``: the signed residual ``r = b − N x − D x`` (same
+    shape as ``b``) and the per-column worst componentwise ratio
+    ``max_i |r|_i / (|N||x| + |D||x| + |b|)_i`` (scalar for a single RHS).
+    Columns containing non-finite ``x`` entries report ``ratio = inf`` —
+    a NaN solution would otherwise zero the ``denom > 0`` mask and pass
+    verification silently.  Shared by the sweep verifier and the guard's
+    residual checker (:mod:`repro.core.guard`): one fused gather/FMA pass,
+    no per-level structure.  The residual and the denominator share the
+    ``x[cols]`` gather and the coefficient product (``|v·x| = |v|·|x|``
+    exactly in IEEE arithmetic, NaN/inf included), so the verification pass
+    reads the value stream once, not twice.  Batched ``x`` unrolls the K
+    axis into K row-gathers for the same reason :func:`~.codegen._gather_sum`
+    does — XLA's CPU 3-D gather of ``(K, n, m)`` row slices is far slower
+    than K two-dimensional gathers."""
+    dt = b.dtype
+    vf = vals.astype(dt)
+    df = diag.astype(dt)
+    dx = _coef(df, b) * x
+    if x.ndim > 1 and vf.shape[0] <= GATHER_UNROLL_MAX_K:
+        s = jnp.zeros_like(x)
+        a = jnp.zeros_like(x)
+        for k in range(vf.shape[0]):
+            pk = vf[k][:, None] * x[cols[k]]
+            s = s + pk
+            a = a + jnp.abs(pk)
+    else:
+        px = _coef(vf, x) * x[cols]
+        s = jnp.sum(px, axis=0)
+        a = jnp.sum(jnp.abs(px), axis=0)
+    r = b - s - dx
+    denom = a + jnp.abs(dx) + jnp.abs(b)
+    ratio = jnp.max(
+        jnp.where(denom > 0, jnp.abs(r) / jnp.where(denom > 0, denom, 1),
+                  0.0),
+        axis=0)
+    bad = ~jnp.all(jnp.isfinite(x), axis=0)
+    return r, jnp.where(bad, jnp.inf, ratio)
+
+
 def make_sweep_executor(
     layout: SweepLayout,
     k: int,
@@ -267,12 +314,7 @@ def make_sweep_executor(
             x = (b - gsum(vf, x)) / d
         if not verify:
             return x
-        resid = jnp.abs(b - gsum(vf, x) - d * x)
-        denom = (gsum(jnp.abs(vf), jnp.abs(x))
-                 + jnp.abs(d) * jnp.abs(x) + jnp.abs(b))
-        ratio = jnp.max(
-            jnp.where(denom > 0, resid / jnp.where(denom > 0, denom, 1), 0.0),
-            axis=0)
+        _, ratio = residual_terms(b, x, vals, diag, cols)
         return x, ratio
 
     return run

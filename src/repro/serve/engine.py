@@ -125,13 +125,20 @@ class SolveRequest:
     """One RHS vector to solve against the engine's fixed factor L.
 
     ``transpose=True`` requests the backward sweep ``Lᵀ x = b`` (requires the
-    engine to hold a transpose solver)."""
+    engine to hold a transpose solver).
+
+    On completion exactly one of ``x`` / ``error`` is set: a request whose
+    solve raised (e.g. a guarded solver's ``GuardBreakdownError``, or a
+    non-finite RHS) carries the exception in ``error`` with ``done=True``
+    and ``x=None`` — failures are isolated per request, they never poison
+    co-batched neighbours (see ``SolveEngine._solve_group``)."""
 
     rid: int
     b: np.ndarray                   # (n,)
     transpose: bool = False
-    x: Optional[np.ndarray] = None  # set when done
+    x: Optional[np.ndarray] = None  # set when done (unless error)
     done: bool = False
+    error: Optional[Exception] = None
 
 
 class SolveEngine:
@@ -212,7 +219,7 @@ class SolveEngine:
             "max_batch": self.max_batch,
         }
 
-    def refresh(self, new_values) -> "SolveEngine":
+    def refresh(self, new_values, *, validate: bool = True) -> "SolveEngine":
         """Value-only numeric refresh of the engine's factor: new ``data``
         for the same sparsity pattern (array aligned with the original L's
         CSR storage, or a pattern-identical ``CSRMatrix``).
@@ -222,11 +229,15 @@ class SolveEngine:
         swap in for subsequent solves (reusing the already-compiled
         executables via ``SpTRSV.refresh``).  Without the drain, in-flight
         requests would silently be answered with a factor that did not exist
-        when they were enqueued."""
+        when they were enqueued.
+
+        ``validate`` forwards to ``SpTRSV.refresh``'s O(nnz) value health
+        scan (finiteness + zero-pivot); ``validate=False`` admits suspect
+        values and leaves them to a guarded solver's breakdown policy."""
         self.run()
-        self.solver.refresh(new_values)
+        self.solver.refresh(new_values, validate=validate)
         if self.solver_t is not None:
-            self.solver_t.refresh(new_values)
+            self.solver_t.refresh(new_values, validate=validate)
         return self
 
     def submit(self, b: np.ndarray, *, transpose: bool = False) -> SolveRequest:
@@ -255,7 +266,22 @@ class SolveEngine:
         B = np.zeros((solver.n, m), dtype=solver.dtype)
         for j, r in enumerate(reqs):
             B[:, j] = r.b
-        X = np.asarray(solver.solve_batched(jnp.asarray(B)))
+        try:
+            X = np.asarray(solver.solve_batched(jnp.asarray(B)))
+        except Exception:
+            # One bad RHS (or one guarded column over tolerance under
+            # on_breakdown="raise") must not poison the whole micro-batch:
+            # re-solve each request alone so healthy co-batched neighbours
+            # still get answers and only the culprits carry the exception.
+            self.batches += 1
+            for r in reqs:
+                try:
+                    r.x = np.asarray(solver.solve(
+                        jnp.asarray(r.b, dtype=solver.dtype)))
+                except Exception as exc:
+                    r.error = exc
+                r.done = True
+            return
         for j, r in enumerate(reqs):
             r.x = X[:, j]
             r.done = True

@@ -6,9 +6,21 @@ from .generate import (
     poisson2d,
     random_lower,
 )
+from .faults import (
+    FAULT_KINDS,
+    VALUE_FAULTS,
+    diag_positions,
+    inject_values,
+    wrong_pattern,
+)
 from .pathological import PATHOLOGICAL_PATTERNS, diag_condition, pathological
 
 __all__ = [
+    "FAULT_KINDS",
+    "VALUE_FAULTS",
+    "diag_positions",
+    "inject_values",
+    "wrong_pattern",
     "banded_lower",
     "chain_matrix",
     "ic0_factor",

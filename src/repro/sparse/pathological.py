@@ -22,10 +22,21 @@ the regular suite's matrices do not reach:
                     adjacent rows share structure under any relaxation
                     below 1.0, so supernode amalgamation finds nothing (the
                     blocked executor's all-singleton degenerate case)
+``extreme_scale``   diagonal magnitudes pinned at the fp32 format's edges
+                    (~10^±38, plus mid decades): every value is exactly
+                    representable in float64 but overflows/underflows a
+                    float32 pipeline — the storage-precision stress case the
+                    guarded execution layer's verification exists to catch
+``denormal_pivot``  a few pivots at the float32 smallest subnormal (~1.4e-45,
+                    a perfectly normal float64): flush-to-zero or
+                    reduced-precision storage turns them into zero pivots
+                    while the float64 oracle solves cleanly
 
-All are lower-triangular with nonzero diagonals (solvable); ``near_singular``
-is ill-conditioned by design, so comparisons against an oracle must scale
-tolerance by the diagonal spread (see ``diag_condition``).
+All are lower-triangular with nonzero diagonals (solvable); ``near_singular``,
+``extreme_scale`` and ``denormal_pivot`` are ill-conditioned by design, so
+comparisons against an oracle must use the componentwise residual criterion
+rather than forward error (see ``diag_condition`` and the fuzz harness's
+``RESIDUAL_PATTERNS``).
 """
 from __future__ import annotations
 
@@ -139,6 +150,50 @@ def _jagged_rows(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
     return _finalize(rows, cols, vals, n, dtype)
 
 
+def _extreme_scale(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    """Diagonal magnitudes at the float32 format's extremes: ~10^±38 (right
+    at fp32 overflow / underflow), with mid decades mixed in.  Off-diagonals
+    are scaled to each row's own diagonal, which keeps the system solvable
+    (|x_i| tops out near 10^38·poly(n), far inside float64 range) while any
+    float32 storage of the values would overflow or flush to zero."""
+    rows, cols = list(range(n)), list(range(n))
+    expo = rng.choice(np.array([-38.0, -19.0, 0.0, 19.0, 38.0]), size=n)
+    expo += rng.uniform(-0.5, 0.5, size=n)
+    diag = (10.0 ** expo) * np.where(rng.random(n) < 0.5, -1.0, 1.0)
+    vals = list(diag)
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, int(rng.integers(1, 4))),
+                            replace=False):
+            rows.append(i)
+            cols.append(int(j))
+            vals.append(rng.normal() * 0.3 * abs(diag[i]))
+    return _finalize(rows, cols, vals, n, dtype)
+
+
+def _denormal_pivot(n: int, rng: np.random.Generator, dtype) -> CSRMatrix:
+    """Well-scaled factor apart from a few pivots at the float32 smallest
+    subnormal (~1.4e-45) — a perfectly ordinary float64 number the oracle
+    divides by without drama, but one that flushes to exactly zero in bf16
+    and sits on the flush-to-zero boundary of fp32 pipelines.  Row 0 is
+    never hit (same rationale as the fault harness: a broken root proves
+    nothing about propagation)."""
+    rows, cols = list(range(n)), list(range(n))
+    diag = (4.0 + rng.random(n)) * np.where(rng.random(n) < 0.5, -1.0, 1.0)
+    k = max(2, n // 24)
+    picked = 1 + rng.choice(n - 1, size=k, replace=False)
+    diag[picked] = (np.float64(np.finfo(np.float32).smallest_subnormal)
+                    * (1.0 + rng.random(k))
+                    * np.sign(diag[picked]))
+    vals = list(diag)
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, int(rng.integers(1, 4))),
+                            replace=False):
+            rows.append(i)
+            cols.append(int(j))
+            vals.append(rng.normal() * 0.3)
+    return _finalize(rows, cols, vals, n, dtype)
+
+
 PATHOLOGICAL_PATTERNS = {
     "arrow": _arrow,
     "dense_last_row": _dense_last_row,
@@ -147,6 +202,8 @@ PATHOLOGICAL_PATTERNS = {
     "power_law": _power_law,
     "near_singular": _near_singular,
     "jagged_rows": _jagged_rows,
+    "extreme_scale": _extreme_scale,
+    "denormal_pivot": _denormal_pivot,
 }
 
 

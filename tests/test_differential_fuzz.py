@@ -17,11 +17,13 @@ file in the assertion message, so a nightly failure is replayable without
 re-deriving the random state.
 
 Tolerances: solutions are compared in float64.  For well-conditioned
-patterns the bound is a few ulp (scaled by the oracle's magnitude);
-``near_singular`` spreads its diagonal over ~9 decades, where forward error
-against an oracle is not the right criterion — it asserts the componentwise
-residual bound ``|L x - b| <= tol * (|L| |x| + |b|)`` instead (the backward
-stability test substitution actually satisfies).
+patterns the bound is a few ulp (scaled by the oracle's magnitude); the
+``RESIDUAL_PATTERNS`` (``near_singular``'s ~9-decade diagonal spread,
+``extreme_scale``'s fp32-edge magnitudes, ``denormal_pivot``'s fp32-subnormal
+pivots) make forward error against an oracle the wrong criterion — they
+assert the componentwise residual bound
+``|L x - b| <= tol * (|L| |x| + |b|)`` instead (the backward stability test
+substitution actually satisfies).
 """
 import itertools
 import json
@@ -33,7 +35,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.compat import enable_x64
-from repro.core import RewriteConfig, SpTRSV
+from repro.core import GuardConfig, RewriteConfig, SpTRSV
 from repro.sparse import PATHOLOGICAL_PATTERNS, pathological
 
 STRATEGIES = ["serial", "levelset", "levelset_unroll",
@@ -45,6 +47,9 @@ POLICIES = {
 }
 LAYOUTS = ["permuted", "scatter"]
 PATTERNS = sorted(PATHOLOGICAL_PATTERNS)
+# patterns whose conditioning makes forward error against the oracle
+# meaningless — checked with the componentwise residual criterion instead
+RESIDUAL_PATTERNS = {"near_singular", "extreme_scale", "denormal_pivot"}
 
 # (strategy, policy, layout, transpose, batch) — the full local grid
 GRID = list(itertools.product(STRATEGIES, sorted(POLICIES), LAYOUTS,
@@ -104,7 +109,7 @@ def _check(L, pattern, x, b, x_ref, transpose, combo, seed):
     assert x.shape == x_ref.shape
     try:
         assert np.isfinite(x).all(), "non-finite entries in solution"
-        if pattern == "near_singular":
+        if pattern in RESIDUAL_PATTERNS:
             # componentwise backward-error bound: |A x - b| <= tol (|A||x| + |b|)
             A = L.to_dense()
             if transpose:
@@ -125,7 +130,7 @@ def _check(L, pattern, x, b, x_ref, transpose, combo, seed):
             f"— repro dumped to {path}\n{err}") from None
 
 
-def _run_combo(L, pattern, seed, combo, mesh=None, backend=None):
+def _run_combo(L, pattern, seed, combo, mesh=None, backend=None, guard=None):
     strategy, policy, layout, transpose, batch = combo
     kw = dict(strategy=strategy, layout=layout, transpose=transpose,
               rewrite=POLICIES[policy])
@@ -133,6 +138,8 @@ def _run_combo(L, pattern, seed, combo, mesh=None, backend=None):
         kw["mesh"] = mesh
     if backend is not None:
         kw["backend"] = backend
+    if guard is not None:
+        kw["guard"] = guard
     s = SpTRSV.build(L, **kw)
     rng = np.random.default_rng(10_000 + seed)
     if batch:
@@ -210,6 +217,96 @@ def test_sweep_fallback_fires_on_pathological(pattern):
         assert s.sweep_stats.fallback_columns == 1
         combo = ("sweep", "none", "permuted", False, 0)
         _check(L, pattern, x, b, _oracle(L, b, False), False, combo, 1)
+
+
+# --------------------------------------------------------------------------
+# guarded execution: fp32-edge patterns and mixed-precision refinement get
+# the same differential treatment as the plain strategies
+# --------------------------------------------------------------------------
+EXTREME_PATTERNS = ["extreme_scale", "denormal_pivot"]
+GUARD_STRATEGIES = ["serial", "levelset", "levelset_unroll", "sweep",
+                    "blocked"]
+GUARD_GRID = list(itertools.product(GUARD_STRATEGIES, ["none"], LAYOUTS,
+                                    [False, True], [0, 3]))
+_GUARD_STRIDE = 3
+
+
+@pytest.mark.parametrize("pattern", EXTREME_PATTERNS)
+def test_differential_guarded_extremes(pattern):
+    """Tier-1: the fp32-edge patterns (values that overflow/underflow any
+    float32 pipeline, pivots at the fp32 subnormal floor) through *guarded*
+    solvers with ``on_breakdown="fallback"`` — verification must either pass
+    outright or route through the corrective path, and the returned solution
+    must satisfy the same componentwise residual criterion as every other
+    strategy.  Rotating slice of strategy × layout × transpose × batch."""
+    L = pathological(pattern, n=72, seed=1)
+    phase = EXTREME_PATTERNS.index(pattern)
+    with enable_x64():
+        for combo in GUARD_GRID[phase::_GUARD_STRIDE]:
+            _run_combo(L, pattern, 1, combo,
+                       guard=GuardConfig(on_breakdown="fallback"))
+
+
+MIXED_PATTERNS = ["arrow", "bidiag_chain", "power_law", "singleton_ladder"]
+MIXED_GRID = list(itertools.product(["levelset", "sweep", "blocked"],
+                                    ["none"], ["permuted"],
+                                    [False, True], [0, 3]))
+_MIXED_STRIDE = 2
+
+
+def _run_mixed_combo(L, pattern, seed, combo):
+    """precision="mixed" stores the packed values in bf16 (fp32 diagonal) and
+    must still match the float64 oracle after guarded iterative refinement —
+    forward error here, not just residual, because these patterns are
+    well-conditioned and refinement claims fp64-class accuracy."""
+    strategy, policy, layout, transpose, batch = combo
+    s = SpTRSV.build(L, strategy=strategy, layout=layout, transpose=transpose,
+                     rewrite=POLICIES[policy],
+                     guard=GuardConfig(precision="mixed", refine_steps=6,
+                                       on_breakdown="refine"))
+    rng = np.random.default_rng(10_000 + seed)
+    b = rng.standard_normal((L.n, batch) if batch else L.n)
+    x = np.asarray(s.solve(jnp.asarray(b)))
+    x_ref = _oracle(L, b, transpose)
+    scale = max(np.abs(x_ref).max(), 1.0)
+    try:
+        np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-9 * scale)
+    except AssertionError as err:
+        path = _dump_repro(L, pattern, seed, combo, str(err))
+        raise AssertionError(
+            f"mixed-precision mismatch for {combo} on {pattern}(seed={seed})"
+            f" — repro dumped to {path}\n{err}") from None
+
+
+@pytest.mark.parametrize("pattern", MIXED_PATTERNS)
+def test_differential_mixed_precision(pattern):
+    """Tier-1: guarded ``precision="mixed"`` vs the float64 oracle on the
+    well-conditioned patterns, rotating slice of strategy × transpose ×
+    batch (permuted layout only — mixed requires runtime value buffers)."""
+    L = pathological(pattern, n=72, seed=1)
+    phase = MIXED_PATTERNS.index(pattern)
+    with enable_x64():
+        for combo in MIXED_GRID[phase::_MIXED_STRIDE]:
+            _run_mixed_combo(L, pattern, 1, combo)
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("pattern", EXTREME_PATTERNS)
+def test_differential_guarded_exhaustive(pattern):
+    """Nightly: full guarded grid on the fp32-edge patterns plus the full
+    mixed-precision grid on the well-conditioned ones, FUZZ_SEEDS seeds."""
+    seeds = int(os.environ.get("FUZZ_SEEDS", "3"))
+    with enable_x64():
+        for seed in range(seeds):
+            L = pathological(pattern, n=96, seed=seed)
+            for combo in GUARD_GRID:
+                _run_combo(L, pattern, seed, combo,
+                           guard=GuardConfig(on_breakdown="fallback"))
+            Lw = pathological(MIXED_PATTERNS[seed % len(MIXED_PATTERNS)],
+                              n=96, seed=seed)
+            for combo in MIXED_GRID:
+                _run_mixed_combo(Lw, MIXED_PATTERNS[seed % len(MIXED_PATTERNS)],
+                                 seed, combo)
 
 
 @pytest.mark.fuzz
