@@ -7,6 +7,7 @@ are built by :mod:`repro.core.codegen` and live on device.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Tuple
 
 import numpy as np
@@ -49,6 +50,28 @@ class CSRMatrix:
 
     def row_nnz(self) -> np.ndarray:
         return np.diff(self.indptr)
+
+    def pattern_hash(self) -> str:
+        """Stable digest of the sparsity *pattern* (shape + indptr +
+        indices; values excluded) — the key a serving tier uses to route
+        same-pattern numeric refreshes onto already-compiled solvers
+        (:class:`repro.serve.SolverRegistry`).
+
+        The digest is content-based (blake2b over the canonical int64 index
+        arrays), so it is stable across processes, sessions, and transports
+        — unlike ``id()`` or Python ``hash()``.  Memoized per instance; the
+        index arrays of a built matrix are treated as immutable, like every
+        other consumer in this package treats them."""
+        cached = getattr(self, "_pattern_hash", None)
+        if cached is not None:
+            return cached
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.asarray(self.shape, dtype=np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.indptr, dtype=np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.indices, dtype=np.int64).tobytes())
+        digest = h.hexdigest()
+        object.__setattr__(self, "_pattern_hash", digest)  # frozen dataclass
+        return digest
 
     # -- validation ---------------------------------------------------------
     def validate(self) -> "CSRMatrix":

@@ -483,6 +483,31 @@ class SpTRSV:
         )
 
     @staticmethod
+    def build_cold(L: CSRMatrix, *, transpose_too: bool = False,
+                   **build_kwargs) -> tuple["SpTRSV", Optional["SpTRSV"]]:
+        """Cheapest-possible build for *cold* serving traffic: the
+        row-serial scan executor, no planner probes, no rewrite candidates,
+        no supernode detection, no schedule packing — just the O(nnz) level
+        analysis and a ``lax.scan``.
+
+        This is the path a :class:`repro.serve.SolverRegistry` uses to
+        answer requests for a never-seen sparsity pattern *immediately*
+        while the planned (``strategy="auto"``) build runs on a background
+        worker; the serial solver is exact, refreshable (permuted layout
+        keeps the scan operands as runtime buffers), and orders of
+        magnitude cheaper to stand up than a planned build.
+
+        Returns ``(forward, backward)`` — ``backward`` is ``None`` unless
+        ``transpose_too=True`` (then both directions come from one shared
+        analysis via :meth:`build_pair`).  Extra keyword arguments
+        (``guard=``, ``backend=``, ...) pass through to the builder;
+        ``strategy`` is pinned to ``"serial"``."""
+        build_kwargs.pop("strategy", None)
+        if transpose_too:
+            return SpTRSV.build_pair(L, strategy="serial", **build_kwargs)
+        return SpTRSV.build(L, strategy="serial", **build_kwargs), None
+
+    @staticmethod
     def build_pair(L: CSRMatrix, **kwargs) -> tuple["SpTRSV", "SpTRSV"]:
         """Build ``(forward, backward)`` solvers — ``L y = b`` and
         ``Lᵀ z = y`` — from **one** shared symbolic analysis.
@@ -974,6 +999,16 @@ class SpTRSV:
             return self._refresh_ctx.system.dtype
         return np.dtype(np.float64)
 
+    @property
+    def pattern_hash(self) -> Optional[str]:
+        """Stable sparsity-pattern digest of the *source* factor this solver
+        was built from (:meth:`CSRMatrix.pattern_hash`) — the registry key a
+        serving tier routes same-pattern refreshes by.  ``None`` only for a
+        solver built without refresh state."""
+        if self._refresh_ctx is None:
+            return None
+        return self._refresh_ctx.source.pattern_hash()
+
     def solve(self, b: jnp.ndarray) -> jnp.ndarray:
         """Solve L x = b (or Lᵀ x = b for a ``transpose`` solver).  ``b``
         may be ``(n,)`` (one system) or ``(n, m)`` (m independent systems
@@ -1151,6 +1186,11 @@ class SpTRSV:
             "permutation_applied": bool(ps and ps.permutation_applied),
             "packed_value_bytes": ps.value_bytes if ps else None,
             "packed_index_bytes": ps.index_bytes if ps else None,
+            # total resident packed-buffer footprint of this executor —
+            # what a serving registry's byte budget charges per solver
+            "packed_bytes": ((ps.value_bytes + ps.index_bytes)
+                             if ps else None),
+            "pattern_hash": self.pattern_hash,
             "padded_value_bytes": ps.padded_value_bytes if ps else None,
             "n_pad": ps.n_pad if ps else None,
             "refreshable_in_place": (self._refresh_ctx is not None

@@ -9,6 +9,16 @@ prompt prefill into slot-sliced cache writes).
 For the production meshes the engine jits ``prefill`` and ``decode_step``
 with cache shardings from ``models.sharding.cache_specs`` (int8 KV for
 qwen decode_32k per assignment).
+
+The SpTRSV half of this module is the **per-factor worker** of the
+multi-tenant solve service: :class:`SolveEngine` owns one factor pair
+(forward + optional transpose), micro-batches same-direction requests into
+power-of-base width buckets, isolates per-request failures, and supports
+atomic solver promotion (:meth:`SolveEngine.swap_solvers`) so a
+:class:`repro.serve.SolverRegistry` can replace the cheap cold serial pair
+with the planned build without dropping queued requests.  The
+:class:`repro.serve.SolveService` composes one engine per resident sparsity
+pattern and continuously batches requests *across* tenants through them.
 """
 from __future__ import annotations
 
@@ -131,11 +141,16 @@ class SolveRequest:
     solve raised (e.g. a guarded solver's ``GuardBreakdownError``, or a
     non-finite RHS) carries the exception in ``error`` with ``done=True``
     and ``x=None`` — failures are isolated per request, they never poison
-    co-batched neighbours (see ``SolveEngine._solve_group``)."""
+    co-batched neighbours (see ``SolveEngine._solve_group``).
+
+    ``tenant`` is an opaque caller tag the multi-tenant
+    :class:`repro.serve.SolveService` uses for per-tenant accounting;
+    the engine itself never branches on it."""
 
     rid: int
     b: np.ndarray                   # (n,)
     transpose: bool = False
+    tenant: Optional[str] = None
     x: Optional[np.ndarray] = None  # set when done (unless error)
     done: bool = False
     error: Optional[Exception] = None
@@ -170,14 +185,22 @@ class SolveEngine:
 
     def __init__(self, solver, solver_t=None, *, max_batch: int = 64,
                  bucket_base: int = 2):
-        assert max_batch >= 1
+        # real ValueErrors, not asserts: a serving tier runs under
+        # ``python -O`` too, and a stripped assert here would let a
+        # mis-sized engine silently corrupt batch buffers downstream
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1; got {max_batch}")
+        if solver_t is not None and solver_t.n != solver.n:
+            raise ValueError(
+                f"solver_t solves a {solver_t.n}-row system but solver "
+                f"solves {solver.n} rows — the pair must share one factor")
         self.solver = solver
         self.solver_t = solver_t
-        assert solver_t is None or solver_t.n == solver.n
         self.max_batch = max_batch
         self.bucket_base = max(2, bucket_base)
         self.queue: deque = deque()
         self.solved = 0
+        self.failed = 0
         self.batches = 0
         self._next_rid = 0
 
@@ -215,9 +238,33 @@ class SolveEngine:
             "backward": self.solver_t.stats() if self.solver_t else None,
             "queue_depth": len(self.queue),
             "solved": self.solved,
+            "failed": self.failed,
             "batches": self.batches,
             "max_batch": self.max_batch,
         }
+
+    def swap_solvers(self, solver, solver_t=None) -> None:
+        """Atomically replace the engine's solver pair (the registry's
+        cold-to-planned *promotion*).  The replacement must solve the same
+        system size and keep the transpose direction servable if the engine
+        already serves it — queued transpose requests must not be stranded.
+        In-flight batches are unaffected: ``_solve_group`` reads the solver
+        reference once at drain time."""
+        if solver.n != self.solver.n:
+            raise ValueError(
+                f"promoted solver solves {solver.n} rows but this engine "
+                f"serves a {self.solver.n}-row factor")
+        if self.solver_t is not None and solver_t is None:
+            raise ValueError(
+                "engine serves transpose requests but the promoted pair "
+                "has no transpose solver")
+        if solver_t is not None and solver_t.n != solver.n:
+            raise ValueError(
+                f"promoted solver_t solves {solver_t.n} rows but solver "
+                f"solves {solver.n} rows — the pair must share one factor")
+        self.solver = solver
+        if solver_t is not None:
+            self.solver_t = solver_t
 
     def refresh(self, new_values, *, validate: bool = True) -> "SolveEngine":
         """Value-only numeric refresh of the engine's factor: new ``data``
@@ -240,12 +287,22 @@ class SolveEngine:
             self.solver_t.refresh(new_values, validate=validate)
         return self
 
-    def submit(self, b: np.ndarray, *, transpose: bool = False) -> SolveRequest:
+    def submit(self, b: np.ndarray, *, transpose: bool = False,
+               tenant: Optional[str] = None) -> SolveRequest:
         b = np.asarray(b)
-        assert b.ndim == 1 and b.shape[0] == self.solver.n, b.shape
-        assert not transpose or self.solver_t is not None, \
-            "transpose request but engine was built without a transpose solver"
-        req = SolveRequest(rid=self._next_rid, b=b, transpose=transpose)
+        # these were asserts — stripped under ``python -O``, a wrong-length
+        # RHS would silently write a truncated/broadcast column into the
+        # batch buffer and corrupt every co-batched neighbour
+        if b.ndim != 1 or b.shape[0] != self.solver.n:
+            raise ValueError(
+                f"RHS must be a ({self.solver.n},) vector; got shape "
+                f"{b.shape}")
+        if transpose and self.solver_t is None:
+            raise ValueError(
+                "transpose request but engine was built without a "
+                "transpose solver (pass solver_t= or transpose_too=True)")
+        req = SolveRequest(rid=self._next_rid, b=b, transpose=transpose,
+                           tenant=tenant)
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -273,13 +330,23 @@ class SolveEngine:
             # on_breakdown="raise") must not poison the whole micro-batch:
             # re-solve each request alone so healthy co-batched neighbours
             # still get answers and only the culprits carry the exception.
+            # Each re-solve goes through the width-1 *bucket* (an (n, 1)
+            # buffer at the solver's dtype) — a bare 1-D solve here would
+            # trace one fresh executor per RHS dtype and bypass the bounded
+            # jit-cache discipline the buckets exist for — and counts in
+            # ``batches`` like every other executor dispatch, so the
+            # counters stay consistent between the happy and fallback paths
+            # (1 failed batched attempt + len(reqs) width-1 re-solves).
             self.batches += 1
             for r in reqs:
+                b1 = np.zeros((solver.n, 1), dtype=solver.dtype)
+                b1[:, 0] = r.b
                 try:
-                    r.x = np.asarray(solver.solve(
-                        jnp.asarray(r.b, dtype=solver.dtype)))
+                    r.x = np.asarray(
+                        solver.solve_batched(jnp.asarray(b1)))[:, 0]
                 except Exception as exc:
                     r.error = exc
+                self.batches += 1
                 r.done = True
             return
         for j, r in enumerate(reqs):
@@ -290,7 +357,10 @@ class SolveEngine:
     def step(self) -> int:
         """Drain up to ``max_batch`` queued requests, batched per direction
         (forward / transpose).  Returns the number of requests completed
-        (0 if the queue is empty)."""
+        (0 if the queue is empty).  Requests that complete with ``error``
+        set count in ``failed``, not ``solved`` — ``stats()["solved"]``
+        must mean answers, not attempts, or a breakdown-heavy tenant would
+        read as healthy throughput on the dashboard."""
         if not self.queue:
             return 0
         take = min(len(self.queue), self.max_batch)
@@ -301,7 +371,9 @@ class SolveEngine:
             self._solve_group(self.solver, fwd)
         if bwd:
             self._solve_group(self.solver_t, bwd)
-        self.solved += take
+        ok = sum(1 for r in reqs if r.error is None)
+        self.solved += ok
+        self.failed += take - ok
         return take
 
     def run(self) -> int:

@@ -5,6 +5,8 @@ from .generate import (
     lung2_like,
     poisson2d,
     random_lower,
+    refresh_values,
+    serve_traffic,
 )
 from .faults import (
     FAULT_KINDS,
@@ -27,6 +29,8 @@ __all__ = [
     "lung2_like",
     "poisson2d",
     "random_lower",
+    "refresh_values",
+    "serve_traffic",
     "PATHOLOGICAL_PATTERNS",
     "diag_condition",
     "pathological",

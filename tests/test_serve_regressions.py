@@ -1,21 +1,30 @@
 """SolveEngine serving-tier regressions.
 
-Two bugfixes pinned here:
+Bugfixes pinned here:
 
 * ``refresh`` must drain the admission queue before swapping factor values —
   an in-flight request is answered with the factor that existed when it was
   enqueued, never silently re-priced against values from the future;
 * ``_solve_group`` allocates the batch buffer in the **solver's** dtype, not
   ``np.result_type`` over the requests — one float64 request must not up-cast
-  the bucket and miss every jit-cache entry compiled at the solver's dtype.
+  the bucket and miss every jit-cache entry compiled at the solver's dtype;
+* ``step`` must count errored requests in ``failed``, not ``solved`` —
+  ``stats()["solved"]`` means answers, not attempts;
+* ``__init__``/``submit`` validation raises ``ValueError`` (asserts are
+  stripped under ``python -O`` and a wrong-length RHS would silently
+  corrupt the batch buffer);
+* the ``_solve_group`` fallback routes per-request re-solves through the
+  width-1 *bucket* (no per-RHS retrace) and counts each executor dispatch
+  in ``batches`` — counters stay consistent between paths.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import CSRMatrix, SpTRSV
+from repro.compat import enable_x64
+from repro.core import CSRMatrix, GuardBreakdownError, GuardConfig, SpTRSV
 from repro.serve import SolveEngine
-from repro.sparse import chain_matrix
+from repro.sparse import chain_matrix, random_lower
 
 
 def _regen_values(L, seed):
@@ -81,3 +90,102 @@ def test_mixed_dtype_request_does_not_retrace():
         np.testing.assert_allclose(
             r.x, np.asarray(s.solve(jnp.asarray(r.b, jnp.float32))),
             rtol=1e-6, atol=1e-6)
+
+
+def _guarded_engine(n=48, seed=1, strategy="levelset", max_batch=8):
+    L = random_lower(n, seed=seed)
+    s = SpTRSV.build(L, strategy=strategy,
+                     guard=GuardConfig(on_breakdown="raise"))
+    return L, SolveEngine(s, max_batch=max_batch)
+
+
+def test_failed_requests_counted_as_failed_not_solved():
+    """An errored request used to count in ``solved`` — a breakdown-heavy
+    tenant read as healthy throughput.  ``step``'s return stays the number
+    of requests *completed* (either way)."""
+    with enable_x64():
+        L, eng = _guarded_engine()
+        rng = np.random.default_rng(2)
+        good = [eng.submit(rng.standard_normal(L.n)) for _ in range(3)]
+        bad_b = rng.standard_normal(L.n)
+        bad_b[0] = np.nan
+        bad = eng.submit(bad_b)
+        assert eng.step() == 4
+        assert (eng.solved, eng.failed) == (3, 1)
+        st = eng.stats()
+        assert (st["solved"], st["failed"]) == (3, 1)
+        assert isinstance(bad.error, GuardBreakdownError) and bad.x is None
+        for r in good:
+            assert r.error is None and r.x is not None
+
+
+def test_engine_validation_raises_value_errors():
+    L = chain_matrix(16)
+    s = SpTRSV.build(L, strategy="serial")
+    other = SpTRSV.build(chain_matrix(8), strategy="serial")
+    with pytest.raises(ValueError, match="max_batch"):
+        SolveEngine(s, max_batch=0)
+    with pytest.raises(ValueError, match="must share one factor"):
+        SolveEngine(s, other)
+    eng = SolveEngine(s)   # no transpose solver
+    with pytest.raises(ValueError, match=r"\(16,\)"):
+        eng.submit(np.zeros(17))
+    with pytest.raises(ValueError, match=r"\(16,\)"):
+        eng.submit(np.zeros((16, 1)))
+    with pytest.raises(ValueError, match="transpose"):
+        eng.submit(np.zeros(16), transpose=True)
+    with pytest.raises(ValueError, match="promoted solver solves"):
+        eng.swap_solvers(other)
+    with pytest.raises(ValueError, match="no transpose solver"):
+        SolveEngine(s, s).swap_solvers(s)
+
+
+def test_fallback_counts_batches_consistently():
+    """3 requests, one bad: 1 failed batched attempt + 3 width-1 re-solves
+    = 4 executor dispatches, and exactly the culprit carries the error."""
+    with enable_x64():
+        L, eng = _guarded_engine()
+        rng = np.random.default_rng(3)
+        reqs = [eng.submit(rng.standard_normal(L.n)) for _ in range(2)]
+        bad_b = rng.standard_normal(L.n)
+        bad_b[5] = np.inf
+        bad = eng.submit(bad_b)
+        assert eng.batches == 0
+        assert eng.step() == 3
+        assert eng.batches == 4
+        assert (eng.solved, eng.failed) == (2, 1)
+        assert isinstance(bad.error, GuardBreakdownError)
+        for r in reqs:
+            assert r.error is None and r.x is not None
+        # a clean follow-up batch adds exactly one dispatch
+        eng.submit(rng.standard_normal(L.n))
+        eng.run()
+        assert eng.batches == 5 and eng.solved == 3
+
+
+def test_fallback_resolves_through_width1_bucket():
+    """The per-request re-solves must reuse the compiled width-1 bucket —
+    a bare 1-D solve would trace a fresh executor per RHS and bypass the
+    bounded jit-cache discipline."""
+    with enable_x64():
+        L, eng = _guarded_engine()
+        s = eng.solver
+        rng = np.random.default_rng(4)
+        # warm the width-1 and width-4 buckets
+        eng.submit(rng.standard_normal(L.n))
+        assert eng.run() == 1
+        for _ in range(4):
+            eng.submit(rng.standard_normal(L.n))
+        assert eng.run() == 4
+        if not hasattr(s._solve_fn, "_cache_size"):
+            pytest.skip("jit cache introspection unavailable on this JAX")
+        before = s._solve_fn._cache_size()
+        # now a failing 4-wide batch: fallback re-solves all 4 at width 1
+        bad_b = rng.standard_normal(L.n)
+        bad_b[0] = np.nan
+        eng.submit(bad_b)
+        for _ in range(3):
+            eng.submit(rng.standard_normal(L.n))
+        assert eng.step() == 4
+        assert (eng.solved, eng.failed) == (5 + 3, 1)
+        assert s._solve_fn._cache_size() == before

@@ -232,7 +232,9 @@ def test_solve_engine_rejects_transpose_without_solver():
     from repro.serve.engine import SolveEngine
 
     eng = SolveEngine(SpTRSV.build(L))
-    with pytest.raises(AssertionError):
+    # a real ValueError, not an assert — asserts are stripped under
+    # ``python -O`` and the request would strand in the queue unanswered
+    with pytest.raises(ValueError, match="transpose"):
         eng.submit(np.zeros(L.n, np.float32), transpose=True)
 
 
